@@ -1,0 +1,50 @@
+"""Paper Fig. 4 — latent-size ablation on S3D: 'HierAE-N' (hyper-block latent
+N) across BAE latent sizes, vs the block-AE 'Baseline' and 'StackAE' (two
+stacked residual BAEs).
+
+Claims validated (paper Sec. III-D):
+  * compression improves with hyper-block latent size (HierAE-256 > ... > -32
+    at comparable NRMSE),
+  * the hierarchical setup beats the flat block-AE baseline,
+  * stacking a second BAE adds ~nothing over one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ae_point, dataset, emit, fitted_compressor
+from repro.baselines.block_ae import BlockAEBaseline
+from repro.data.blocks import nrmse, ungroup_hyperblocks
+
+
+def main(full: bool = False) -> None:
+    hb_latents = (32, 64, 128, 256) if full else (32, 128)
+    bae_latents = (8, 16, 32, 64) if full else (8, 32)
+
+    for hb_l in hb_latents:
+        for bae_l in bae_latents:
+            comp, hb = fitted_compressor("s3d", hb_latent=hb_l,
+                                         bae_latent=bae_l)
+            p = ae_point(comp, hb)
+            emit("fig4.hierae", hb_latent=hb_l, bae_latent=bae_l, **p)
+
+    # StackAE: one HBAE + two stacked BAEs
+    comp, hb = fitted_compressor("s3d", hb_latent=hb_latents[-1],
+                                 bae_latent=bae_latents[0], n_bae_stages=2)
+    emit("fig4.stackae", hb_latent=hb_latents[-1], bae_latent=bae_latents[0],
+         **ae_point(comp, hb))
+
+    # Baseline: flat block AE (GBAE-style), sweep its latent
+    _, hb = dataset("s3d")
+    blocks = ungroup_hyperblocks(hb)
+    for latent in ((8, 16, 32, 64) if full else (8, 32)):
+        base = BlockAEBaseline(in_dim=blocks.shape[1], latent=latent,
+                               epochs=12).fit(blocks, seed=0)
+        recon, nbytes = base.compress(blocks)
+        emit("fig4.baseline", latent=latent,
+             cr=round(blocks.size * 4 / nbytes, 2),
+             nrmse=float(nrmse(blocks, recon)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 6 — CR vs NRMSE against reference compressors (sz-like, zfp-like)
+on all three datasets, with the full pipeline incl. GAE error bounds.
+
+The paper's headline: 2-8x higher CR than SZ3 on S3D (multi-variable), up to
+3x on E3SM, up to 2x on XGC.  The baselines here are mechanism
+reimplementations ("sz-like"/"zfp-like", DESIGN.md §1) on synthetic surrogate
+fields, so absolute CRs differ from the paper; what we validate is the
+*ordering* at matched NRMSE and that the gap is largest on the
+high-dimensional multi-variable S3D data.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, fitted_compressor, gae_point
+from repro.baselines import szlike, zfplike
+from repro.data.blocks import ungroup_hyperblocks
+
+TAUS = {
+    "s3d": (2.0, 1.0, 0.5, 0.2),
+    "e3sm": (4.0, 2.0, 1.0, 0.5),
+    "xgc": (8.0, 4.0, 2.0, 1.0),
+}
+EBS = (0.1, 0.05, 0.02, 0.01, 0.005)
+
+
+def _field(name: str, hb: np.ndarray) -> np.ndarray:
+    """Reference compressors see the same normalized data, unblocked into a
+    dense array (they exploit smoothness, not blocks)."""
+    blocks = ungroup_hyperblocks(hb)
+    return blocks.reshape(-1, blocks.shape[1])
+
+
+def main(full: bool = False) -> None:
+    names = ("s3d", "e3sm", "xgc") if full else ("s3d", "e3sm")
+    for name in names:
+        comp, hb = fitted_compressor(name)
+        for tau in TAUS[name] if full else TAUS[name][1:3]:
+            emit(f"fig6.{name}.ours", **gae_point(comp, hb, tau))
+        field = _field(name, hb)
+        for r in szlike.compression_curve(field, list(EBS if full else EBS[1:4])):
+            emit(f"fig6.{name}.szlike", eb=r["eb"], cr=round(r["cr"], 2),
+                 nrmse=float(r["nrmse"]))
+        for r in zfplike.compression_curve(field, list(EBS if full else EBS[1:4])):
+            emit(f"fig6.{name}.zfplike", tol=r["tol"], cr=round(r["cr"], 2),
+                 nrmse=float(r["nrmse"]))
+
+
+if __name__ == "__main__":
+    main(full=True)

@@ -1,0 +1,47 @@
+"""Paper Fig. 9 — per-species reconstruction error on S3D.
+
+The paper reports per-species NRMSE/CR with the shared latent cost amortized
+equally across species.  We reproduce the accounting: per-species NRMSE from
+the full pipeline at one tau, with the archive bytes amortized per species.
+
+Claim validated: error is controlled for EVERY species (no species is
+sacrificed), which is the point of per-species GAE blocks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fitted_compressor
+from repro.data.blocks import nrmse
+
+
+def main(full: bool = False) -> None:
+    comp, hb = fitted_compressor("s3d")
+    tau = 0.5
+    archive = comp.compress(hb, tau=tau)
+    recon = comp.decompress(archive)
+
+    # hyper-blocks are (N, k, 58*5*4*4); species axis is the leading block dim
+    n, k, d = hb.shape
+    n_species = 58
+    per = d // n_species
+    x = hb.reshape(n * k, n_species, per)
+    r = recon.reshape(n * k, n_species, per)
+    cr_per_species = archive.compression_ratio() * 1.0  # amortized equally
+
+    errs = []
+    for s in range(n_species):
+        e = nrmse(x[:, s], r[:, s])
+        errs.append(e)
+    errs = np.asarray(errs)
+    emit("fig9.species", cr_amortized=round(cr_per_species, 1),
+         nrmse_mean=float(errs.mean()), nrmse_max=float(errs.max()),
+         nrmse_min=float(errs.min()),
+         n_species_below_2x_mean=int((errs < 2 * errs.mean()).sum()))
+    if full:
+        for s in range(n_species):
+            emit("fig9.per_species", species=s, nrmse=float(errs[s]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle on CPU.
+
+On this container the Pallas kernels execute via the interpreter, so wall
+times mean nothing for TPU — what IS meaningful and reported here:
+  * correctness deltas vs the oracle at benchmark shapes,
+  * the jnp-oracle wall time (the actual CPU compute being modeled),
+  * the kernels' VMEM working-set estimates (static, from BlockSpecs).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main(full: bool = False) -> None:
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (paper-agnostic LM hot-spot)
+    from repro.kernels.flash_attention import ops as fa, ref as fa_ref
+    b, s, h, kv, hd = (2, 1024, 8, 2, 64) if full else (1, 512, 4, 2, 64)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    t_ref = _time(jax.jit(lambda q, k, v: fa_ref.flash_attention_ref(q, k, v)),
+                  q, k, v)
+    err = float(jnp.max(jnp.abs(fa.flash_attention(q, k, v) -
+                                fa_ref.flash_attention_ref(q, k, v))))
+    vmem_kb = (128 * hd * 3 + 128 * hd) * 4 // 1024
+    emit("kernel.flash_attention", shape=f"{b}x{s}x{h}x{hd}",
+         ref_ms=round(t_ref * 1e3, 1), max_err=err, vmem_tile_kb=vmem_kb)
+
+    # hyper-block attention (HBAE)
+    from repro.kernels.block_attention import ops as ba, ref as ba_ref
+    nB, n, d = (4096, 10, 128) if full else (512, 10, 128)
+    ks = jax.random.split(key, 3)
+    q, k, v = (jax.random.normal(kk, (nB, n, d), jnp.float32) for kk in ks)
+    t_ref = _time(jax.jit(lambda q, k, v: ba_ref.block_attention_ref(q, k, v)),
+                  q, k, v)
+    err = float(jnp.max(jnp.abs(ba.block_attention(q, k, v) -
+                                ba_ref.block_attention_ref(q, k, v))))
+    emit("kernel.block_attention", shape=f"{nB}x{n}x{d}",
+         ref_ms=round(t_ref * 1e3, 1), max_err=err,
+         vmem_tile_kb=256 * n * d * 4 * 4 // 1024)
+
+    # GAE projection
+    from repro.kernels.gae_project import ops as gp, ref as gp_ref
+    nb, dd = (8192, 1521) if full else (2048, 256)
+    ks = jax.random.split(key, 2)
+    r = jax.random.normal(ks[0], (nb, dd), jnp.float32)
+    u = jax.random.normal(ks[1], (dd, dd), jnp.float32) / np.sqrt(dd)
+    t_ref = _time(jax.jit(lambda r, u: gp_ref.gae_project_ref(r, u)), r, u)
+    c, _ = gp.gae_project(r, u)
+    ce, _ = gp_ref.gae_project_ref(r, u)
+    emit("kernel.gae_project", shape=f"{nb}x{dd}",
+         ref_ms=round(t_ref * 1e3, 1),
+         max_err=float(jnp.max(jnp.abs(c - ce))),
+         vmem_tile_kb=(256 * 512 + 512 * 512 + 2 * 256 * 512) * 4 // 1024)
+
+    # fused quantize
+    from repro.kernels.quantize import ops as qz, ref as qz_ref
+    x = jax.random.normal(key, (1 << 20,), jnp.float32)
+    t_ref = _time(jax.jit(lambda x: qz_ref.quantize_fused_ref(x, 0.01)), x)
+    qk, dk, ek = qz.quantize_fused(x, 0.01)
+    qr, dr, er = qz_ref.quantize_fused_ref(x, 0.01)
+    # ties at bin boundaries may flip by 1 ulp between the kernel's true
+    # division and XLA's multiply-by-reciprocal; both stay within bin/2.
+    mism = int(jnp.sum(jnp.abs(qk - qr) > 1))
+    emit("kernel.quantize", n=x.size, ref_ms=round(t_ref * 1e3, 1),
+         off_by_more_than_1=mism,
+         tie_flips=int(jnp.sum(qk != qr)))
+
+    # SSD scan
+    from repro.kernels.ssd_scan import ops as sd, ref as sd_ref
+    b2, s2, h2, p2, n2 = (2, 512, 8, 64, 64) if full else (1, 256, 4, 32, 32)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b2, s2, h2, p2), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b2, s2, h2), jnp.float32))
+    a_log = jax.random.uniform(ks[2], (h2,), jnp.float32, 0.0, 1.0)
+    bb = jax.random.normal(ks[3], (b2, s2, 1, n2), jnp.float32)
+    cc = jax.random.normal(ks[4], (b2, s2, 1, n2), jnp.float32)
+    t_ref = _time(jax.jit(lambda *a: sd_ref.ssd_scan_ref(*a, 128)),
+                  x, dt, a_log, bb, cc)
+    y1, _ = sd.ssd(x, dt, a_log, bb, cc, chunk=128)
+    y2, _ = sd_ref.ssd_scan_ref(x, dt, a_log, bb, cc, 128)
+    emit("kernel.ssd_scan", shape=f"{b2}x{s2}x{h2}x{p2}",
+         ref_ms=round(t_ref * 1e3, 1),
+         max_err=float(jnp.max(jnp.abs(y1 - y2))),
+         vmem_state_kb=p2 * n2 * 4 // 1024)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Shared benchmark plumbing: dataset/compressor caching (fits are reused
+across sweeps within one benchmark run), CR/NRMSE evaluation, CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import sys
+import time
+
+import numpy as np
+
+from repro.core.pipeline import HierarchicalCompressor
+from repro.data import synthetic
+from repro.data.blocks import nrmse
+
+
+def emit(name: str, **fields) -> None:
+    """One CSV line per result: name,key=value,..."""
+    parts = [name] + [f"{k}={v}" for k, v in fields.items()]
+    print(",".join(parts), flush=True)
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(name: str, quick: bool = True, seed: int = 0):
+    cfg, hb = synthetic.make_dataset(name, quick=quick, seed=seed)
+    return cfg, hb
+
+
+_FIT_CACHE: dict = {}
+
+
+def fitted_compressor(name: str, *, hb_latent: int | None = None,
+                      bae_latent: int | None = None,
+                      use_attention: bool = True, use_bae: bool = True,
+                      n_bae_stages: int = 1, quick: bool = True,
+                      epochs: int | None = None,
+                      seed: int = 0) -> tuple[HierarchicalCompressor, np.ndarray]:
+    """Train (cached) a compressor variant on a synthetic dataset."""
+    base_cfg, hb = dataset(name, quick, seed)
+    cfg = dataclasses.replace(
+        base_cfg,
+        hb_latent=hb_latent or base_cfg.hb_latent,
+        bae_latent=bae_latent or base_cfg.bae_latent,
+        use_attention=use_attention, use_bae=use_bae,
+        n_bae_stages=n_bae_stages,
+        epochs_hbae=epochs or base_cfg.epochs_hbae,
+        epochs_bae=epochs or base_cfg.epochs_bae)
+    key = (name, cfg.hb_latent, cfg.bae_latent, use_attention, use_bae,
+           n_bae_stages, quick, cfg.epochs_hbae, seed)
+    if key not in _FIT_CACHE:
+        t0 = time.time()
+        comp = HierarchicalCompressor(cfg).fit(hb, seed=seed)
+        _FIT_CACHE[key] = comp
+        print(f"# fit {name} hb_latent={cfg.hb_latent} "
+              f"bae_latent={cfg.bae_latent} attn={use_attention} "
+              f"bae={use_bae}x{n_bae_stages} in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    return _FIT_CACHE[key], hb
+
+
+def ae_point(comp: HierarchicalCompressor, hb: np.ndarray) -> dict:
+    """AE-only CR/NRMSE (the paper's ablation points exclude GAE):
+    compress(tau=None) = quantized+Huffman latents, no PCA stage."""
+    archive = comp.compress(hb, tau=None)
+    recon = comp.decompress(archive)
+    return {"cr": round(archive.compression_ratio(), 2),
+            "nrmse": float(nrmse(hb, recon))}
+
+
+def gae_point(comp: HierarchicalCompressor, hb: np.ndarray, tau: float) -> dict:
+    archive = comp.compress(hb, tau=tau)
+    recon = comp.decompress(archive)
+    return {"tau": tau, "cr": round(archive.compression_ratio(), 2),
+            "nrmse": float(nrmse(hb, recon))}

@@ -1,0 +1,52 @@
+"""§Perf hillclimb helper: compare a tagged dry-run variant against the
+baseline artifact for the same cell.
+
+  python -m benchmarks.compare --cell qwen1.5-0.5b:train_4k:single --tag _sp
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import ARTIFACT_DIR, derive
+
+
+def load_cell(cell: str, tag: str = "", artifact_dir: str = ARTIFACT_DIR) -> dict:
+    arch, shape, mesh = cell.split(":")
+    path = os.path.join(artifact_dir, f"{arch}__{shape}__{mesh}{tag}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(cell: str, tag: str, artifact_dir: str = ARTIFACT_DIR) -> dict:
+    base = derive(load_cell(cell, "", artifact_dir))
+    var = derive(load_cell(cell, tag, artifact_dir))
+    out = {"cell": cell, "tag": tag}
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+              "roofline_fraction", "useful_flops_ratio", "hbm_gb"):
+        b, v = base[k], var[k]
+        delta = (v - b) / b if b else float("inf")
+        out[k] = {"base": b, "variant": v, "delta_pct": 100 * delta}
+    out["dominant"] = {"base": base["dominant"], "variant": var["dominant"]}
+    return out
+
+
+def main(full: bool = False) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    args, _ = ap.parse_known_args()
+    r = compare(args.cell, args.tag, args.dir)
+    print(f"cell {r['cell']}  tag {r['tag']}")
+    print(f"dominant: {r['dominant']['base']} -> {r['dominant']['variant']}")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+              "roofline_fraction", "hbm_gb"):
+        v = r[k]
+        print(f"  {k:>18}: {v['base']:.4g} -> {v['variant']:.4g}  "
+              f"({v['delta_pct']:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""HLO inspector for the §Perf loop: rank instructions by result-buffer size
+and aggregate bytes by op kind — the 'profile' available without hardware
+(DESIGN.md §8: the dry-run IR is the profile).
+
+  REPRO_DUMP_HLO=/tmp/cell.hlo python -m repro.launch.dryrun --cell a:s:m
+  python -m benchmarks.hlo_inspect /tmp/cell.hlo --top 25
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+# "  %name = f32[8,128]{1,0} op-name(...)"
+_LINE = re.compile(r"%\S+ = ([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+([a-z0-9\-]+)\(")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def inspect(text: str, top: int = 25) -> tuple[list, dict]:
+    rows = []
+    by_kind: dict[str, int] = defaultdict(int)
+    for m in _LINE.finditer(text):
+        dtype, dims, op = m.groups()
+        b = shape_bytes(dtype, dims)
+        rows.append((b, op, f"{dtype}[{dims}]"))
+        by_kind[op] += b
+    rows.sort(reverse=True)
+    return rows[:top], dict(sorted(by_kind.items(), key=lambda kv: -kv[1]))
+
+
+def main(full: bool = False) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=25)
+    args, _ = ap.parse_known_args()
+    with open(args.path) as f:
+        text = f.read()
+    rows, by_kind = inspect(text, args.top)
+    print("== largest result buffers ==")
+    for b, op, shape in rows:
+        print(f"  {b / 1e6:10.1f} MB  {op:<22} {shape}")
+    print("== total result bytes by op kind (top 20) ==")
+    for op, b in list(by_kind.items())[:20]:
+        print(f"  {b / 1e9:10.2f} GB  {op}")
+
+
+if __name__ == "__main__":
+    main()

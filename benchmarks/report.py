@@ -1,0 +1,107 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the artifact
+JSONs.  ``python -m benchmarks.report [--dir artifacts/dryrun] [--tag X]``
+prints markdown to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import ARTIFACT_DIR, derive
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def _fmt_t(s: float) -> str:
+    if s < 1e-3:
+        return f"{s * 1e6:.0f}us"
+    if s < 1.0:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def load_all(artifact_dir: str, tag: str = "") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, f"*{tag}.json"))):
+        base = os.path.basename(path)[:-5]
+        if tag and not base.endswith(tag):
+            continue
+        if not tag and base.split("__")[-1] not in ("single", "multi"):
+            continue   # skip tagged §Perf variants in the baseline table
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | compile | HBM/dev | HLO TFLOP/dev "
+             "| coll MB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skipped | — | — | — | — |")
+            continue
+        mem = r["memory"]["peak_estimate_bytes"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f}s | {_fmt_bytes(mem)} | "
+            f"{r['flops_per_device'] / 1e12:.2f} | "
+            f"{r['collectives']['total_bytes'] / 1e6:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | dominant | "
+             "useful-FLOPs | roofline-frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok" or r["mesh"] != "single":
+            continue
+        d = derive(r)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {_fmt_t(d['t_compute_s'])} | "
+            f"{_fmt_t(d['t_memory_s'])} | {_fmt_t(d['t_collective_s'])} | "
+            f"**{d['dominant']}** | {d['useful_flops_ratio']:.3f} | "
+            f"{d['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def collective_breakdown(recs: list[dict], arch: str, shape: str,
+                         mesh: str = "single") -> str:
+    for r in recs:
+        if (r.get("arch"), r.get("shape"), r.get("mesh")) == (arch, shape, mesh):
+            b = r["collectives"]["bytes"]
+            c = r["collectives"]["counts"]
+            return "; ".join(f"{k}: {c.get(k, 0)}x {_fmt_bytes(v)}"
+                             for k, v in sorted(b.items()))
+    return "(missing)"
+
+
+def main(full: bool = False) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--section", default="all",
+                    choices=("all", "dryrun", "roofline"))
+    args, _ = ap.parse_known_args()
+    recs = load_all(args.dir, args.tag)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod)\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs  / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes  / (chips x 819 GB/s HBM)
+    collective term = coll_bytes / (chips x 50 GB/s ICI link)
+
+cost_analysis() reports post-SPMD per-partition numbers, so chips=1 in the
+denominators here (the artifact's flops/bytes are already per device);
+collective bytes are parsed from the partitioned HLO, which is likewise the
+per-device program.  The dominant term is the bottleneck; MODEL_FLOPS /
+(HLO_FLOPs x chips) is the useful-compute fraction (remat + padding +
+non-matmul overhead show up here).  roofline_fraction = model-flops-time /
+dominant-term-time — the score a perfect kernel on the dominant resource
+would get.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+ICI_BW = 50e9               # B/s / link (per-device collective payload / this)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """Kind-aware analytic FLOPs: 6·N_active·D for a train step (fwd+bwd),
+    2·N_active·D for prefill/decode (fwd only).  Compressor cells keep the
+    artifact's own analytic figure."""
+    kind = rec.get("kind", "train")
+    if kind == "compressor":
+        return rec.get("model_flops", 0.0)
+    n_active = rec.get("params", {}).get("active", 0)
+    tokens = rec.get("tokens_per_step", 0)
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def derive(rec: dict) -> dict:
+    n = rec["n_devices"]
+    flops_dev = rec["flops_per_device"]
+    bytes_dev = rec["bytes_per_device"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops_dev = model_flops(rec) / max(n, 1)
+    useful = model_flops_dev / flops_dev if flops_dev > 0 else 0.0
+    t_model = model_flops_dev / PEAK_FLOPS
+    frac = t_model / max(terms[dominant], 1e-30)
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "useful_flops_ratio": useful, "roofline_fraction": frac,
+            "hbm_gb": rec["memory"]["peak_estimate_bytes"] / 1e9}
+
+
+def load(artifact_dir: str = ARTIFACT_DIR, mesh: str = "single",
+         tag: str = "") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, f"*__{mesh}{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        rows.append(derive(rec))
+    return rows
+
+
+def main(full: bool = False) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args, _ = ap.parse_known_args()
+    rows = load(args.dir, args.mesh, args.tag)
+    if not rows:
+        print(f"roofline,no_artifacts_found,dir={args.dir}")
+        return
+    hdr = ("arch", "shape", "dominant", "t_compute_s", "t_memory_s",
+           "t_collective_s", "useful_flops_ratio", "roofline_fraction",
+           "hbm_gb")
+    print(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(",".join(
+            f"{r[k]:.4g}" if isinstance(r[k], float) else str(r[k])
+            for k in hdr))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure + system benches.
+
+``python -m benchmarks.run``            — quick pass (CI-speed, all benches)
+``python -m benchmarks.run --full``     — paper-scale sweeps
+``python -m benchmarks.run --only fig6``
+
+Output is CSV-ish lines ``name,key=value,...`` (see benchmarks/common.emit);
+the roofline bench reads artifacts produced by ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = (
+    "bench_fig4_latent",      # paper Fig. 4
+    "bench_fig5_components",  # paper Fig. 5
+    "bench_table2_quant",     # paper Table II
+    "bench_fig6_curves",      # paper Fig. 6 (vs sz-like / zfp-like)
+    "bench_fig8_hist",        # paper Fig. 8
+    "bench_fig9_species",     # paper Fig. 9
+    "bench_kernels",          # Pallas kernels vs oracles
+    "bench_grad_compress",    # technique on the DP collective
+    "roofline",               # dry-run roofline table
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    failures = []
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.main(full=args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# --- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Batched serving with error-bounded KV-cache compression.
+
+Spins up the serving engine on a small dense LM, runs a batch of requests
+through continuous batching twice — once with the raw KV cache and once with
+the bounded KV compressor (runtime/kvcache) — and reports:
+  * agreement of generated tokens between the two runs,
+  * the per-token KV perturbation bound that was enforced,
+  * the storage the PCA-GAE page archive would use for the frozen pages.
+
+Run:  PYTHONPATH=src python examples/serve_kvcompress.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.models.registry import get_model, reduced_config
+from repro.runtime.kvcache import PAGE_TOKENS, compress_pages, paginate
+from repro.serve.engine import Request, ServeEngine
+
+ARCH = "qwen3-1.7b"
+KV_TAU = 0.05        # per-token l2 bound on the KV perturbation
+
+cfg = reduced_config(get_config(ARCH))
+run = RunConfig()
+api = get_model(cfg)
+params = api.init_params(jax.random.PRNGKey(0), cfg, run)
+
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 24).astype(np.int32),
+                max_new_tokens=12) for i in range(6)]
+
+outs = {}
+for tau in (None, KV_TAU):
+    engine = ServeEngine(cfg, run, params, batch_size=3, max_len=64,
+                         kv_tau=tau, seed=0)
+    outs[tau] = engine.serve([Request(r.rid, r.prompt, r.max_new_tokens)
+                              for r in reqs])
+
+agree = np.mean([np.mean(a.tokens == b.tokens)
+                 for a, b in zip(outs[None], outs[KV_TAU])])
+print(f"token agreement raw-KV vs bounded-KV (tau={KV_TAU}): {agree:.1%}")
+
+# what the PCA-GAE page archive costs for a frozen prompt cache
+state = api.init_decode_state(params, cfg, run, 4, 64)
+engine = ServeEngine(cfg, run, params, batch_size=4, max_len=64, seed=0)
+prompts = rng.integers(0, cfg.vocab, (4, 32)).astype(np.int32)
+state, _ = engine._prefill(params, prompts, state)
+k_cache = np.asarray(jax.tree.leaves(state.caches)[0])   # (L,B,S,KV,hd)
+l, b, s, kvh, hd = k_cache.shape
+pages = paginate(k_cache.reshape(l * b, s, kvh, hd))     # page = 16 tokens
+flat = pages.reshape(-1, pages.shape[-1])
+recon, store = compress_pages(flat, tau=0.1,
+                              page_shape=(PAGE_TOKENS, kvh, hd))
+errs = np.linalg.norm(flat - recon, axis=1)
+print(f"frozen pages: {store.n_pages} pages, per-page l2 <= 0.1 "
+      f"(max realized {errs.max():.4f})")
+print(f"page archive: {store.nbytes():,} B vs {store.raw_nbytes():,} B raw "
+      f"-> {store.raw_nbytes() / max(store.nbytes(), 1):.1f}x")
+print("bounded KV compression ✓")

@@ -1,0 +1,100 @@
+"""End-to-end LM training driver with the paper's technique on the gradient
+all-reduce + full fault-tolerance plumbing.
+
+Trains a ~100M-parameter qwen-family model (reduced depth/width preset for a
+single host; pass --full-100m for the true 100M config if you have the
+cores/accelerators) for a few hundred steps on the deterministic synthetic
+token pipeline, with:
+  * PCA+error-feedback gradient compression (rank-32 coefficients all-reduced
+    instead of dense grads — runtime/grad_compress),
+  * atomic checkpointing every 25 steps + automatic restore,
+  * an INJECTED crash at step 30 to demonstrate the resilient runner
+    recovering mid-run (watch for the [failure]/[restore] events).
+
+Run:  PYTHONPATH=src python examples/train_lm_gradcompress.py --steps 120
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.data.tokens import SyntheticCorpus, TokenPipelineConfig
+from repro.models.registry import reduced_config
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.failures import ResilientRunner, chaos_wrap
+from repro.train import optim
+from repro.train.loop import init_train_state, make_train_step
+
+
+def build_cfg(full_100m: bool):
+    cfg = get_config("qwen1.5-0.5b")
+    if full_100m:
+        # ~100M params: 12L x d768 x ff2048, 32k vocab
+        return dataclasses.replace(cfg, n_layers=12, d_model=768, n_heads=12,
+                                   n_kv_heads=12, d_ff=2048, vocab=32768,
+                                   head_dim=64)
+    # single-host preset (~7M): same family, trains in minutes on CPU
+    return dataclasses.replace(reduced_config(cfg), n_layers=4, d_model=128,
+                               n_heads=4, n_kv_heads=4, d_ff=512, vocab=4096,
+                               head_dim=32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--crash-at", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.full_100m)
+    run = RunConfig(gradient_compression="pca_ef", grad_comp_rank=32)
+    opt = optim.adamw(optim.warmup_cosine_schedule(1e-3, 20, args.steps),
+                      max_grad_norm=1.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, run, opt)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"model: {n_params/1e6:.1f}M params, grad compression rank 32")
+
+    step_fn = jax.jit(make_train_step(cfg, run, opt), donate_argnums=(0,))
+
+    corpus = SyntheticCorpus(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=7))
+
+    def data_iter(start):
+        def gen():
+            s = start
+            while True:
+                b = corpus.batch_at(s)
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+                s += 1
+        return iter(gen())
+
+    ckpt_dir = tempfile.mkdtemp(prefix="lm_ckpt_")
+    ckpt = CheckpointManager(ckpt_dir, retention=2)
+
+    # chaos: crash once at --crash-at to exercise restore-from-checkpoint
+    chaotic = chaos_wrap(step_fn, {args.crash_at})
+    runner = ResilientRunner(
+        chaotic, ckpt, data_iter, save_every=25,
+        on_event=lambda kind, info: print(f"[{kind}] {info}"))
+
+    t0 = time.time()
+    state, end = runner.run(state, 0, args.steps)
+    dt = time.time() - t0
+    print(f"\n{end} steps in {dt:.1f}s "
+          f"({end * args.batch * args.seq / dt:,.0f} tok/s)")
+    print(f"final loss {runner.stats.last_loss:.4f}  "
+          f"restores={runner.stats.restores}  (ckpts in {ckpt_dir})")
+    assert runner.stats.restores >= 1, "the injected crash should restore"
+    assert runner.stats.last_loss < 8.0, "loss should be dropping"
+    print("resilient compressed-gradient training ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: attention-based hierarchical data reduction with guaranteed error
+bounds (Li et al. 2024), built as a multi-pod JAX training/inference framework."""
+__version__ = "1.0.0"

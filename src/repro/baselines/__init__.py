@@ -1,0 +1,1 @@
+from repro.baselines import block_ae, szlike, zfplike  # noqa: F401

@@ -1,0 +1,114 @@
+"""'Baseline' of the paper's ablation (Sec. III-D / Fig. 4-5).
+
+A block-based compressor that divides data into blocks and compresses each
+block independently with cascaded fully-connected layers (GBAE-style [16]) —
+no hyper-blocks, no attention, no residual stage.  Latents are quantized +
+Huffman coded with the same bitstream machinery as the main pipeline so the
+comparison isolates the architecture, not the entropy coder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import entropy
+from repro.core.attention import linear, linear_init
+from repro.core.quantization import dequantize, quantize
+from repro.train import optim as optim_mod
+
+Array = jax.Array
+
+
+def block_ae_init(key: Array, in_dim: int, hidden: int, latent: int,
+                  depth: int = 2) -> dict:
+    """Cascaded FC encoder/decoder: depth hidden layers each side."""
+    keys = jax.random.split(key, 2 * depth + 2)
+    enc, dims = [], [in_dim] + [hidden] * depth + [latent]
+    for i in range(len(dims) - 1):
+        enc.append(linear_init(keys[i], dims[i], dims[i + 1]))
+    dec, dims_d = [], [latent] + [hidden] * depth + [in_dim]
+    for i in range(len(dims_d) - 1):
+        dec.append(linear_init(keys[depth + 1 + i], dims_d[i], dims_d[i + 1]))
+    return {"enc": enc, "dec": dec}
+
+
+def block_ae_encode(params: dict, x: Array) -> Array:
+    h = x
+    for i, p in enumerate(params["enc"]):
+        h = linear(p, h)
+        if i < len(params["enc"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def block_ae_decode(params: dict, z: Array) -> Array:
+    h = z
+    for i, p in enumerate(params["dec"]):
+        h = linear(p, h)
+        if i < len(params["dec"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def block_ae_apply(params: dict, x: Array) -> Array:
+    return block_ae_decode(params, block_ae_encode(params, x))
+
+
+def _loss(params, x):
+    return jnp.mean(jnp.square(block_ae_apply(params, x) - x))
+
+
+@functools.partial(jax.jit, static_argnames=("opt",), donate_argnums=(0, 1))
+def _step(params, opt_state, x, opt):
+    loss, grads = jax.value_and_grad(_loss)(params, x)
+    params, opt_state, _ = opt.update(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+@dataclasses.dataclass
+class BlockAEBaseline:
+    """fit/compress on (N, D) flattened blocks."""
+    in_dim: int
+    hidden: int = 256
+    latent: int = 32
+    depth: int = 2
+    bin_size: float = 0.005
+    epochs: int = 30
+    batch: int = 256
+    lr: float = 1e-3
+    params: Optional[dict] = None
+
+    def fit(self, blocks: np.ndarray, seed: int = 0) -> "BlockAEBaseline":
+        n, d = blocks.shape
+        assert d == self.in_dim
+        self.params = block_ae_init(jax.random.PRNGKey(seed), d, self.hidden,
+                                    self.latent, self.depth)
+        opt = optim_mod.adam(lr=self.lr)
+        opt_state = opt.init(self.params)
+        rng = np.random.default_rng(seed)
+        data = jnp.asarray(blocks)
+        b = min(self.batch, n)
+        for _ in range(self.epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - b + 1, b):
+                self.params, opt_state, _ = _step(self.params, opt_state,
+                                                  data[order[i:i + b]], opt)
+        return self
+
+    def compress(self, blocks: np.ndarray, quantize_latent: bool = True
+                 ) -> tuple[np.ndarray, int]:
+        """Returns (reconstruction, compressed_bytes)."""
+        z = np.asarray(jax.jit(block_ae_encode)(self.params, jnp.asarray(blocks)))
+        if quantize_latent:
+            q = np.asarray(quantize(jnp.asarray(z), self.bin_size))
+            nbytes = entropy.huffman_compress(q).nbytes()
+            z = np.asarray(dequantize(jnp.asarray(q), self.bin_size))
+        else:
+            nbytes = z.size * 4
+        recon = np.asarray(jax.jit(block_ae_decode)(self.params, jnp.asarray(z)))
+        return recon, nbytes

@@ -1,0 +1,86 @@
+"""SZ3-mechanism reference compressor ("sz-like").
+
+Implements the interpolation-based predictor that powers SZ3 (Zhao et al.;
+[4] in the paper): a multi-level scheme where each level predicts midpoints by
+linear interpolation of already-*decoded* coarser points, quantizes the
+prediction error with bins of width 2*eb (guaranteeing pointwise |err| <= eb),
+Huffman-codes the quantization integers and DEFLATEs the seed.  The classic
+pointwise Lorenzo loop is inherently serial; the interpolation form is
+level-sequential but fully vectorized within a level, so it runs at numpy
+speed while keeping the same error-control mechanism.
+
+This is a faithful *mechanism* reimplementation for comparison curves, not the
+tuned C++ SZ3 codebase (see DESIGN.md §1); EXPERIMENTS.md labels it "sz-like".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import entropy
+
+
+def compress(data: np.ndarray, eb: float) -> tuple[np.ndarray, int]:
+    """Error-bounded compression. Returns (decoded, compressed_bytes).
+
+    Pointwise guarantee: |data - decoded| <= eb (quantized-midpoint residuals;
+    the coarsest seed grid is stored exactly).
+    """
+    x = np.asarray(data, np.float32)
+    nd = x.ndim
+    dec = np.zeros_like(x)
+
+    max_stride = 1
+    for n in x.shape:
+        while max_stride * 2 < n:
+            max_stride *= 2
+
+    seed_slices = tuple(slice(None, None, max_stride) for _ in range(nd))
+    seed = x[seed_slices].copy()
+    dec[seed_slices] = seed
+
+    quants: list[np.ndarray] = []
+    stride = max_stride
+    while stride >= 2:
+        half = stride // 2
+        for a in range(nd):
+            n = x.shape[a]
+            targets = np.arange(half, n, stride)
+            if targets.size == 0:
+                continue
+            # grid of already-decoded points: axes before `a` refined to
+            # `half` by earlier passes of this level, axes after still `stride`
+            grid = tuple(slice(None, None, half) if i < a else
+                         (slice(None) if i == a else slice(None, None, stride))
+                         for i in range(nd))
+            sub_dec = dec[grid]          # strided view — writes propagate
+            sub_x = x[grid]
+            left = targets - half
+            last = ((n - 1) // stride) * stride
+            right = np.minimum(targets + half, last)
+            dl = np.take(sub_dec, left, axis=a)
+            dr = np.take(sub_dec, right, axis=a)
+            pred = 0.5 * (dl + dr)
+            err = np.take(sub_x, targets, axis=a) - pred
+            q = np.round(err / (2.0 * eb)).astype(np.int64)
+            quants.append(q.ravel())
+            vals = pred + q.astype(np.float32) * (2.0 * eb)
+            idx = tuple(slice(None) if i != a else targets for i in range(nd))
+            sub_dec[idx] = vals
+        stride = half
+
+    allq = np.concatenate(quants) if quants else np.zeros(0, np.int64)
+    stream_bytes = entropy.huffman_compress(allq).nbytes() if allq.size else 0
+    seed_bytes = len(entropy.zlib_pack(seed.tobytes()))
+    total = stream_bytes + seed_bytes + 64
+    return dec, total
+
+
+def compression_curve(data: np.ndarray, ebs: list[float]) -> list[dict]:
+    """CR / NRMSE points for a sweep of error bounds."""
+    from repro.data.blocks import nrmse
+    out = []
+    for eb in ebs:
+        dec, nbytes = compress(data, eb)
+        out.append({"eb": eb, "cr": data.size * 4 / nbytes,
+                    "nrmse": nrmse(data, dec)})
+    return out

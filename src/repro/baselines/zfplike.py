@@ -1,0 +1,94 @@
+"""ZFP-mechanism reference compressor ("zfp-like").
+
+Implements the ZFP pipeline ([15][17] in the paper) on 4^d blocks:
+block-floating-point exponent alignment -> ZFP's near-orthogonal separable
+decorrelating transform -> uniform coefficient quantization (precision derived
+from the requested tolerance) -> Huffman + DEFLATE.  Embedded bit-plane group
+testing is replaced by entropy coding of quantized coefficients — same
+transform-coding mechanism, simpler bitstream (see DESIGN.md §1);
+EXPERIMENTS.md labels it "zfp-like".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import entropy
+
+# ZFP's forward decorrelating transform (Lindstrom 2014), rows = basis
+_T = np.array([[4, 4, 4, 4],
+               [5, 1, -1, -5],
+               [-4, 4, 4, -4],
+               [-2, 6, -6, 2]], np.float32) / 16.0
+_TI = np.linalg.inv(_T)
+
+
+def _blockify(x: np.ndarray) -> tuple[np.ndarray, tuple, tuple]:
+    """Pad each dim to a multiple of 4 and split into (n_blocks, 4, 4, ...)."""
+    nd = x.ndim
+    pads = [(0, (-s) % 4) for s in x.shape]
+    xp = np.pad(x, pads, mode="edge")
+    grid = tuple(s // 4 for s in xp.shape)
+    inter = []
+    for g in grid:
+        inter.extend([g, 4])
+    y = xp.reshape(inter).transpose(*range(0, 2 * nd, 2), *range(1, 2 * nd, 2))
+    return y.reshape(int(np.prod(grid)), *([4] * nd)), xp.shape, grid
+
+
+def _unblockify(blocks: np.ndarray, padded_shape: tuple, grid: tuple,
+                orig_shape: tuple) -> np.ndarray:
+    nd = len(grid)
+    y = blocks.reshape(*grid, *([4] * nd))
+    perm = []
+    for i in range(nd):
+        perm.extend([i, nd + i])
+    xp = y.transpose(*perm).reshape(padded_shape)
+    return xp[tuple(slice(0, s) for s in orig_shape)]
+
+
+def _transform(blocks: np.ndarray, mat: np.ndarray) -> np.ndarray:
+    """Separable transform along every block axis (axes 1..nd)."""
+    out = blocks
+    nd = blocks.ndim - 1
+    for a in range(1, nd + 1):
+        out = np.moveaxis(np.tensordot(mat, np.moveaxis(out, a, 0), axes=(1, 0)), 0, a)
+    return out
+
+
+def compress(data: np.ndarray, tol: float) -> tuple[np.ndarray, int]:
+    """Tolerance-targeted compression. Returns (decoded, compressed_bytes)."""
+    x = np.asarray(data, np.float32)
+    blocks, padded_shape, grid = _blockify(x)
+    nb = blocks.shape[0]
+    flatb = blocks.reshape(nb, -1)
+
+    # block-floating-point: per-block power-of-two scale
+    emax = np.maximum(np.abs(flatb).max(axis=1), 1e-30)
+    scale = np.exp2(np.ceil(np.log2(emax)))[:, None]
+    normed = (flatb / scale).reshape(blocks.shape)
+
+    coeffs = _transform(normed, _T)
+    # uniform quantization of transform coefficients; step tuned so the
+    # per-point reconstruction error lands near `tol` (transform gain ~1)
+    step = tol * 2.0
+    q = np.round(coeffs.reshape(nb, -1) / (step / scale)).astype(np.int64)
+    deq = q.astype(np.float32) * (step / scale)
+
+    rec = _transform(deq.reshape(blocks.shape), _TI)
+    rec_blocks = rec.reshape(nb, -1) * scale
+    decoded = _unblockify(rec_blocks.reshape(blocks.shape), padded_shape, grid, x.shape)
+
+    stream = entropy.huffman_compress(q)
+    scale_bytes = len(entropy.zlib_pack(np.log2(scale[:, 0]).astype(np.int8).tobytes()))
+    total = stream.nbytes() + scale_bytes + 64
+    return decoded.astype(np.float32), total
+
+
+def compression_curve(data: np.ndarray, tols: list[float]) -> list[dict]:
+    from repro.data.blocks import nrmse
+    out = []
+    for tol in tols:
+        dec, nbytes = compress(data, tol)
+        out.append({"tol": tol, "cr": data.size * 4 / nbytes,
+                    "nrmse": nrmse(data, dec)})
+    return out

@@ -1,0 +1,42 @@
+"""Config registry: ``get_config("<arch-id>")`` for the 10 assigned
+architectures plus the paper's own compressor app configs (s3d/e3sm/xgc)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (LM_SHAPES, ModelConfig, RunConfig, ShapeConfig,
+                                shape_applicable)
+
+_ARCH_MODULES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "whisper-medium": "whisper_medium",
+    "mamba2-370m": "mamba2_370m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def get_compressor_config(dataset: str):
+    mod = importlib.import_module(f"repro.configs.{dataset}")
+    return mod.CONFIG

@@ -1,0 +1,8 @@
+"""qwen1.5-0.5b — dense, QKV bias, tied embeddings. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=2816,
+    vocab=151936, head_dim=64, rope_theta=1000000.0,
+    qkv_bias=True, tie_embeddings=True)

@@ -1,0 +1,3 @@
+"""The paper's contribution: attention-based hierarchical compression with
+guaranteed error bounds (HBAE + BAE + GAE + bitstream)."""
+from repro.core.pipeline import Archive, CompressorConfig, HierarchicalCompressor  # noqa: F401

@@ -1,0 +1,119 @@
+"""Self-attention primitives for the hyper-block autoencoder (paper Eqs. 2-6).
+
+The paper uses a single plain self-attention layer over the ``k`` block
+embeddings of one hyper-block (sequence length = k, embedding dim = d), wrapped
+as ``e~ = Atten(norm(e)) + e`` (Eq. 6).  We implement it multi-head-capable
+(heads=1 reproduces the paper exactly) and route the core computation through
+the fused Pallas kernel when requested (``repro.kernels.block_attention``).
+
+Everything here is expressed over batched hyper-blocks: inputs are
+``(B, k, d)`` where B is the number of hyper-blocks in the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class AttnMeta:
+    """Static (non-traced) attention hyperparameters carried in the params tree."""
+    heads: int
+
+
+# ---------------------------------------------------------------------------
+# layer norm
+# ---------------------------------------------------------------------------
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key: Array, d_in: int, d_out: int, bias: bool = True) -> dict:
+    wkey, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(d_in)
+    p = {"w": jax.random.uniform(wkey, (d_in, d_out), jnp.float32, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(params: dict, x: Array) -> Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# self-attention (paper Eq. 2-3)
+# ---------------------------------------------------------------------------
+
+def attention_init(key: Array, d: int, d_k: Optional[int] = None,
+                   d_v: Optional[int] = None, heads: int = 1) -> dict:
+    """Learned W_Q, W_K, W_V (+ output proj when d_v != d or heads > 1)."""
+    d_k = d_k or d
+    d_v = d_v or d
+    assert d_k % heads == 0 and d_v % heads == 0
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    params = {
+        "wq": linear_init(kq, d, d_k, bias=False),
+        "wk": linear_init(kk, d, d_k, bias=False),
+        "wv": linear_init(kv, d, d_v, bias=False),
+        "wo": linear_init(ko, d_v, d, bias=False),
+        "meta": AttnMeta(heads=heads),
+    }
+    return params
+
+
+def self_attention(params: dict, x: Array, *, use_kernel: bool = False) -> Array:
+    """Plain softmax self-attention over axis -2.  x: (..., k, d) -> (..., k, d)."""
+    heads = params["meta"].heads
+    q = linear(params["wq"], x)
+    k = linear(params["wk"], x)
+    v = linear(params["wv"], x)
+    if use_kernel:
+        from repro.kernels.block_attention import ops as ba_ops
+        ctx = ba_ops.block_attention(q, k, v, heads=heads)
+    else:
+        ctx = _reference_attention(q, k, v, heads)
+    return linear(params["wo"], ctx)
+
+
+def _reference_attention(q: Array, k: Array, v: Array, heads: int) -> Array:
+    *lead, n, dk = q.shape
+    dv = v.shape[-1]
+    hq = q.reshape(*lead, n, heads, dk // heads)
+    hk = k.reshape(*lead, n, heads, dk // heads)
+    hv = v.reshape(*lead, n, heads, dv // heads)
+    scores = jnp.einsum("...qhd,...khd->...hqk", hq, hk) / jnp.sqrt(dk // heads)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("...hqk,...khd->...qhd", w, hv)
+    return ctx.reshape(*lead, n, dv)
+
+
+def attention_block_init(key: Array, d: int, heads: int = 1) -> dict:
+    """The full Eq.6 block: e~ = Atten(norm(e)) + e."""
+    return {"ln": layernorm_init(d), "attn": attention_init(key, d, heads=heads)}
+
+
+def attention_block(params: dict, e: Array, *, use_kernel: bool = False) -> Array:
+    return self_attention(params["attn"], layernorm(params["ln"], e),
+                          use_kernel=use_kernel) + e

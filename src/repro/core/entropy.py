@@ -1,0 +1,203 @@
+"""Entropy coding (paper Sec. II-E): Huffman for quantized coefficients,
+prefix-bitmask + lossless backend for PCA index sets.
+
+The paper uses ZSTD for the concatenated index bitmasks; ``zstandard`` is not
+available offline, so we use stdlib zlib (DEFLATE) behind the same interface —
+mechanism identical, ratios differ by a few percent (noted in DESIGN.md §4).
+
+All of this is host-side (numpy + bytes): on a real deployment the TPU emits
+quantized integer tensors and the host feeders run this lossless pass, exactly
+mirroring the paper's factorization (quantization in-graph, Huffman post-hoc).
+"""
+from __future__ import annotations
+
+import heapq
+import struct
+import zlib
+from typing import NamedTuple
+
+import numpy as np
+
+MAX_CODE_LEN = 16
+
+
+# ---------------------------------------------------------------------------
+# canonical Huffman
+# ---------------------------------------------------------------------------
+
+class HuffmanBook(NamedTuple):
+    symbols: np.ndarray   # (S,) int64, sorted by (length, symbol)
+    lengths: np.ndarray   # (S,) uint8
+    codes: np.ndarray     # (S,) uint32 canonical codes
+
+    def nbytes(self) -> int:
+        """Serialized codebook cost: symbol values + code lengths."""
+        return self.symbols.size * 8 + self.lengths.size
+
+
+def _code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code lengths via heap; freqs > 0."""
+    n = freqs.size
+    if n == 1:
+        return np.array([1], np.uint8)
+    heap: list[tuple[float, int, object]] = [(float(f), i, i) for i, f in enumerate(freqs)]
+    heapq.heapify(heap)
+    lengths = np.zeros(n, np.int64)
+    counter = n
+    while len(heap) > 1:
+        fa, _, a = heapq.heappop(heap)
+        fb, _, b = heapq.heappop(heap)
+        heapq.heappush(heap, (fa + fb, counter, (a, b)))
+        counter += 1
+    stack = [(heap[0][2], 0)]
+    while stack:
+        node, depth = stack.pop()
+        if isinstance(node, tuple):
+            stack.append((node[0], depth + 1))
+            stack.append((node[1], depth + 1))
+        else:
+            lengths[node] = max(depth, 1)
+    return lengths
+
+
+def build_huffman(values: np.ndarray) -> HuffmanBook:
+    """Canonical Huffman book over observed symbols, code length capped at 16."""
+    syms, freqs = np.unique(np.asarray(values).ravel(), return_counts=True)
+    f = freqs.astype(np.float64)
+    lengths = _code_lengths(f)
+    while lengths.max() > MAX_CODE_LEN:
+        f = np.ceil(np.power(f, 0.9))            # flatten distribution, retry
+        lengths = _code_lengths(f)
+    # canonical ordering: (length, symbol)
+    order = np.lexsort((syms, lengths))
+    syms, lengths = syms[order], lengths[order]
+    codes = np.zeros(syms.size, np.uint32)
+    code = 0
+    prev_len = int(lengths[0])
+    for i in range(syms.size):
+        code <<= int(lengths[i]) - prev_len
+        codes[i] = code
+        prev_len = int(lengths[i])
+        code += 1
+    return HuffmanBook(symbols=syms.astype(np.int64),
+                       lengths=lengths.astype(np.uint8), codes=codes)
+
+
+def huffman_encode(values: np.ndarray, book: HuffmanBook) -> bytes:
+    """Vectorized bit-packing of values through the codebook."""
+    v = np.asarray(values).ravel().astype(np.int64)
+    # book is in canonical (length, symbol) order — not value-sorted; map
+    # through a value-sorted view for the searchsorted lookup.
+    order = np.argsort(book.symbols, kind="stable")
+    sorted_syms = book.symbols[order]
+    idx = order[np.searchsorted(sorted_syms, v)]
+    assert np.all(book.symbols[idx] == v), "symbol not in codebook"
+    lens = book.lengths[idx].astype(np.int64)
+    codes = book.codes[idx].astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return b""
+    pos = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    block = np.repeat(np.arange(v.size), lens)
+    within = np.arange(total) - np.repeat(pos, lens)
+    bits = (codes[block] >> (lens[block] - 1 - within)) & 1
+    return np.packbits(bits.astype(np.uint8)).tobytes()
+
+
+def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
+    """Table-driven decode (2^16 lookup)."""
+    if count == 0:
+        return np.zeros(0, np.int64)
+    table_sym = np.zeros(1 << MAX_CODE_LEN, np.int64)
+    table_len = np.zeros(1 << MAX_CODE_LEN, np.uint8)
+    for s, l, c in zip(book.symbols, book.lengths, book.codes):
+        l = int(l)
+        base = int(c) << (MAX_CODE_LEN - l)
+        span = 1 << (MAX_CODE_LEN - l)
+        table_sym[base:base + span] = s
+        table_len[base:base + span] = l
+    bits = np.unpackbits(np.frombuffer(data, np.uint8))
+    bits = np.concatenate([bits, np.zeros(MAX_CODE_LEN, np.uint8)])  # tail pad
+    out = np.empty(count, np.int64)
+    pos = 0
+    # windowed ints, chunked for speed
+    weights = (1 << np.arange(MAX_CODE_LEN - 1, -1, -1)).astype(np.int64)
+    for i in range(count):
+        w = int(bits[pos:pos + MAX_CODE_LEN] @ weights)
+        out[i] = table_sym[w]
+        pos += int(table_len[w])
+    return out
+
+
+class HuffmanStream(NamedTuple):
+    payload: bytes
+    book: HuffmanBook
+    count: int
+
+    def nbytes(self) -> int:
+        return len(self.payload) + self.book.nbytes() + 8
+
+
+def huffman_compress(values: np.ndarray) -> HuffmanStream:
+    book = build_huffman(values)
+    return HuffmanStream(huffman_encode(values, book), book, int(np.asarray(values).size))
+
+
+def huffman_decompress(stream: HuffmanStream) -> np.ndarray:
+    return huffman_decode(stream.payload, stream.book, stream.count)
+
+
+def huffman_size_bits(values: np.ndarray) -> int:
+    """Exact coded size in bits without materializing the stream (for ratio math)."""
+    book = build_huffman(values)
+    v = np.asarray(values).ravel().astype(np.int64)
+    order = np.argsort(book.symbols, kind="stable")
+    idx = order[np.searchsorted(book.symbols[order], v)]
+    return int(book.lengths[idx].astype(np.int64).sum()) + book.nbytes() * 8
+
+
+# ---------------------------------------------------------------------------
+# index bitmask coding (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+def encode_index_sets(index_sets: list[np.ndarray], dim: int) -> bytes:
+    """'1' marks a selected basis vector; store only the shortest prefix that
+    contains all 1s, plus its length; concatenate and DEFLATE."""
+    lengths = []
+    all_bits = []
+    for idx in index_sets:
+        mask = np.zeros(dim, np.uint8)
+        if idx.size:
+            mask[idx] = 1
+            plen = int(idx.max()) + 1
+        else:
+            plen = 0
+        lengths.append(plen)
+        all_bits.append(mask[:plen])
+    bits = np.concatenate(all_bits) if all_bits else np.zeros(0, np.uint8)
+    header = struct.pack("<II", len(index_sets), dim)
+    lens_b = np.asarray(lengths, np.uint32).tobytes()
+    payload = np.packbits(bits).tobytes() if bits.size else b""
+    return zlib.compress(header + lens_b + payload, level=9)
+
+
+def decode_index_sets(blob: bytes) -> list[np.ndarray]:
+    raw = zlib.decompress(blob)
+    n, dim = struct.unpack("<II", raw[:8])
+    lens = np.frombuffer(raw[8:8 + 4 * n], np.uint32).astype(np.int64)
+    bits = np.unpackbits(np.frombuffer(raw[8 + 4 * n:], np.uint8))
+    out = []
+    pos = 0
+    for plen in lens:
+        mask = bits[pos:pos + plen]
+        out.append(np.nonzero(mask)[0].astype(np.int32))
+        pos += int(plen)
+    return out
+
+
+def zlib_pack(data: bytes) -> bytes:
+    return zlib.compress(data, level=9)
+
+
+def zlib_unpack(data: bytes) -> bytes:
+    return zlib.decompress(data)

@@ -1,0 +1,85 @@
+"""Hyper-Block AutoEncoder (HBAE) — paper Sec. II-B.
+
+Encoding path (per hyper-block of k blocks, each block flattened to ``in_dim``):
+  1. each block -> 2-layer FC encoder (ReLU middle) -> embedding e_i in R^emb
+  2. e~ = Atten(LayerNorm(e)) + e                       (Eq. 6)
+  3. flatten (k, emb) -> FC -> latent L_h in R^latent
+
+Decoding mirrors it: L_h -> FC -> (k, emb) -> same attention block form ->
+per-block 2-layer FC decoder -> reconstructed blocks y_i.
+
+Shapes: x is (B, k, in_dim); latent is (B, latent); output is (B, k, in_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import (attention_block, attention_block_init,
+                                  linear, linear_init)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class HbaeMeta:
+    k: int
+    emb: int
+    use_attention: bool
+
+
+def mlp2_init(key: Array, d_in: int, d_hidden: int, d_out: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": linear_init(k1, d_in, d_hidden), "fc2": linear_init(k2, d_hidden, d_out)}
+
+
+def mlp2(params: dict, x: Array) -> Array:
+    return linear(params["fc2"], jax.nn.relu(linear(params["fc1"], x)))
+
+
+def hbae_init(key: Array, *, in_dim: int, k: int, emb: int = 128,
+              hidden: int = 256, latent: int = 128, heads: int = 1,
+              use_attention: bool = True) -> dict:
+    """``use_attention=False`` builds the 'HBAE-woa' ablation of paper Fig. 5."""
+    keys = jax.random.split(key, 6)
+    params = {
+        "enc": mlp2_init(keys[0], in_dim, hidden, emb),
+        "to_latent": linear_init(keys[1], k * emb, latent),
+        "from_latent": linear_init(keys[2], latent, k * emb),
+        "dec": mlp2_init(keys[3], emb, hidden, in_dim),
+        "meta": HbaeMeta(k=k, emb=emb, use_attention=use_attention),
+    }
+    if use_attention:
+        params["enc_attn"] = attention_block_init(keys[4], emb, heads=heads)
+        params["dec_attn"] = attention_block_init(keys[5], emb, heads=heads)
+    return params
+
+
+def hbae_encode(params: dict, x: Array, *, use_kernel: bool = False) -> Array:
+    """(B, k, in_dim) -> (B, latent)."""
+    meta = params["meta"]
+    e = mlp2(params["enc"], x)                           # (B, k, emb)
+    if meta.use_attention:
+        e = attention_block(params["enc_attn"], e, use_kernel=use_kernel)
+    flat = e.reshape(e.shape[0], -1)                      # (B, k*emb)
+    return linear(params["to_latent"], flat)
+
+
+def hbae_decode(params: dict, latent: Array, *, use_kernel: bool = False) -> Array:
+    """(B, latent) -> (B, k, in_dim)."""
+    meta = params["meta"]
+    k, emb = meta.k, meta.emb
+    e = linear(params["from_latent"], latent).reshape(latent.shape[0], k, emb)
+    if meta.use_attention:
+        e = attention_block(params["dec_attn"], e, use_kernel=use_kernel)
+    return mlp2(params["dec"], e)
+
+
+def hbae_apply(params: dict, x: Array, *, use_kernel: bool = False) -> tuple[Array, Array]:
+    """Returns (reconstruction y, latent L_h)."""
+    latent = hbae_encode(params, x, use_kernel=use_kernel)
+    y = hbae_decode(params, latent, use_kernel=use_kernel)
+    return y, latent

@@ -1,0 +1,276 @@
+"""End-to-end compressor pipeline (paper Fig. 1).
+
+``HierarchicalCompressor`` ties together:
+  hyper-block AE (coarse)  ->  block-wise residual AE(s) (fine)  ->
+  GAE PCA post-processing (guaranteed per-block l2 bound)  ->
+  quantization + Huffman + index-bitmask/zlib bitstream.
+
+The object is fit on (a training split of) the data, then ``compress`` returns
+an ``Archive`` whose ``total_bytes()`` is the honest storage cost (AE latents +
+GAE coefficients + index sets + per-block headers).  Model weights and the PCA
+basis are excluded by default — the paper's ratio accounting amortizes them
+("we considered the latent spaces of both autoencoders, as well as the PCA
+coefficients and corresponding index information", Sec. III-C); pass
+``include_model_cost=True`` to count them too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bae as bae_mod
+from repro.core import entropy, gae
+from repro.core import hbae as hbae_mod
+from repro.core import training
+from repro.core.quantization import dequantize, quantize
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class CompressorConfig:
+    block_elems: int                 # flattened AE block size
+    k: int                           # blocks per hyper-block
+    emb: int = 128
+    hidden: int = 256
+    hb_latent: int = 128             # paper: 128 S3D / 64 E3SM,XGC
+    bae_hidden: int = 256
+    bae_latent: int = 16             # paper: 16 for all datasets
+    heads: int = 1
+    use_attention: bool = True       # False => 'HBAE-woa' ablation
+    use_bae: bool = True             # False => 'HBAE' ablation
+    n_bae_stages: int = 1            # 2 => 'StackAE' ablation
+    hb_bin: float = 0.005
+    bae_bin: float = 0.005
+    gae_bin: float = 0.01
+    gae_block_elems: Optional[int] = None   # GAE may re-block (paper Sec. II-D)
+    epochs_hbae: int = 30
+    epochs_bae: int = 30
+    batch: int = 64
+    lr: float = 1e-3
+
+
+@dataclasses.dataclass
+class Archive:
+    """Compressed representation + size accounting."""
+    n_hyperblocks: int
+    hb_stream: entropy.HuffmanStream
+    bae_streams: list[entropy.HuffmanStream]
+    gae_coeff_stream: Optional[entropy.HuffmanStream]
+    gae_index_blob: bytes
+    gae_binexp_blob: bytes
+    n_values: int                    # original float32 count
+
+    def compressed_bytes(self) -> int:
+        total = self.hb_stream.nbytes()
+        total += sum(s.nbytes() for s in self.bae_streams)
+        if self.gae_coeff_stream is not None:
+            total += self.gae_coeff_stream.nbytes()
+        total += len(self.gae_index_blob) + len(self.gae_binexp_blob)
+        return total + 32  # fixed header
+
+    def compression_ratio(self, include_model_bytes: int = 0) -> float:
+        return (self.n_values * 4) / (self.compressed_bytes() + include_model_bytes)
+
+
+class HierarchicalCompressor:
+    """fit / compress / decompress on hyper-block-shaped data (N, k, D)."""
+
+    def __init__(self, config: CompressorConfig):
+        self.cfg = config
+        self.hbae_params: Optional[dict] = None
+        self.bae_params: list[dict] = []
+        self.basis: Optional[np.ndarray] = None
+
+    # -- training ----------------------------------------------------------
+    def fit(self, hyperblocks: np.ndarray, seed: int = 0,
+            log: Optional[Callable] = None) -> "HierarchicalCompressor":
+        cfg = self.cfg
+        n, k, d = hyperblocks.shape
+        assert k == cfg.k and d == cfg.block_elems, (hyperblocks.shape, cfg)
+        key = jax.random.PRNGKey(seed)
+        khb, *kbs = jax.random.split(key, 1 + max(cfg.n_bae_stages, 1))
+        self.hbae_params = training.train_hbae(
+            khb, hyperblocks, emb=cfg.emb, hidden=cfg.hidden, latent=cfg.hb_latent,
+            heads=cfg.heads, use_attention=cfg.use_attention,
+            epochs=cfg.epochs_hbae, batch=cfg.batch, lr=cfg.lr, seed=seed, log=log)
+        if cfg.use_bae:
+            y, _ = self._hbae_forward(hyperblocks)
+            resid = (hyperblocks - y).reshape(n * k, d)
+            self.bae_params = []
+            for s in range(cfg.n_bae_stages):
+                p = training.train_bae(kbs[s], resid, hidden=cfg.bae_hidden,
+                                       latent=cfg.bae_latent, epochs=cfg.epochs_bae,
+                                       batch=max(cfg.batch * 4, 256), lr=cfg.lr,
+                                       seed=seed + s, log=log)
+                self.bae_params.append(p)
+                r_hat, _ = jax.jit(bae_mod.bae_apply)(p, jnp.asarray(resid))
+                resid = resid - np.asarray(r_hat)
+        return self
+
+    # -- forward helpers ----------------------------------------------------
+    def _hbae_forward(self, hyperblocks: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        y, latent = jax.jit(hbae_mod.hbae_apply)(self.hbae_params, jnp.asarray(hyperblocks))
+        return np.asarray(y), np.asarray(latent)
+
+    def reconstruct_ae(self, hyperblocks: np.ndarray,
+                       quantize_latents: bool = True) -> np.ndarray:
+        """AE-only reconstruction (through quantized latents when requested)."""
+        cfg = self.cfg
+        n, k, d = hyperblocks.shape
+        latent = np.asarray(jax.jit(hbae_mod.hbae_encode)(self.hbae_params,
+                                                          jnp.asarray(hyperblocks)))
+        if quantize_latents:
+            latent = np.asarray(dequantize(quantize(jnp.asarray(latent), cfg.hb_bin),
+                                           cfg.hb_bin))
+        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params, jnp.asarray(latent)))
+        recon = y
+        if cfg.use_bae:
+            resid = (hyperblocks - y).reshape(n * k, d)
+            for p in self.bae_params:
+                lb = np.asarray(jax.jit(bae_mod.bae_encode)(p, jnp.asarray(resid)))
+                if quantize_latents:
+                    lb = np.asarray(dequantize(quantize(jnp.asarray(lb), cfg.bae_bin),
+                                               cfg.bae_bin))
+                r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb)))
+                recon = recon + r_hat.reshape(n, k, d)
+                resid = resid - r_hat
+        return recon
+
+    # -- PCA basis -----------------------------------------------------------
+    def fit_basis(self, hyperblocks: np.ndarray) -> np.ndarray:
+        """PCA basis of AE residuals at GAE block granularity."""
+        recon = self.reconstruct_ae(hyperblocks)
+        resid = self._gae_view(hyperblocks - recon)
+        self.basis = np.asarray(gae.fit_pca_basis(jnp.asarray(resid)))
+        return self.basis
+
+    def _gae_view(self, blocks3d: np.ndarray) -> np.ndarray:
+        """(N, k, D) -> (N_gae, D_gae): GAE may use a different block size."""
+        d_gae = self.cfg.gae_block_elems or self.cfg.block_elems
+        flat = blocks3d.reshape(-1)
+        assert flat.size % d_gae == 0
+        return flat.reshape(-1, d_gae)
+
+    def _gae_unview(self, gae_blocks: np.ndarray, shape3d: tuple) -> np.ndarray:
+        return gae_blocks.reshape(shape3d)
+
+    # -- compress / decompress ----------------------------------------------
+    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None) -> Archive:
+        cfg = self.cfg
+        n, k, d = hyperblocks.shape
+
+        # 1. hyper-block AE latents (quantized ints -> Huffman)
+        latent = np.asarray(jax.jit(hbae_mod.hbae_encode)(self.hbae_params,
+                                                          jnp.asarray(hyperblocks)))
+        q_lh = np.asarray(quantize(jnp.asarray(latent), cfg.hb_bin))
+        hb_stream = entropy.huffman_compress(q_lh)
+        lat_deq = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
+        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params,
+                                                     jnp.asarray(lat_deq)))
+
+        # 2. block-wise residual AE stage(s)
+        recon = y
+        bae_streams = []
+        if cfg.use_bae:
+            resid = (hyperblocks - recon).reshape(n * k, d)
+            for p in self.bae_params:
+                lb = np.asarray(jax.jit(bae_mod.bae_encode)(p, jnp.asarray(resid)))
+                q_lb = np.asarray(quantize(jnp.asarray(lb), cfg.bae_bin))
+                bae_streams.append(entropy.huffman_compress(q_lb))
+                lb_deq = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
+                r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb_deq)))
+                recon = recon + r_hat.reshape(n, k, d)
+                resid = resid - r_hat
+
+        # 3. GAE error-bound post-processing
+        gae_coeff_stream = None
+        index_blob = b""
+        binexp_blob = b""
+        if tau is not None:
+            if self.basis is None:
+                self.fit_basis(hyperblocks)
+            x_gae = self._gae_view(hyperblocks)
+            r_gae = self._gae_view(recon)
+            _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis, tau, cfg.gae_bin)
+            # store coefficients in ascending-index order (bitmask decode order)
+            all_coeffs, index_sets, binexps = [], [], []
+            for c in codes:
+                asc = np.argsort(c.indices)
+                index_sets.append(np.sort(c.indices))
+                all_coeffs.append(c.qcoeffs[asc])
+                binexps.append(c.bin_exp)
+            coeffs = (np.concatenate(all_coeffs) if all_coeffs else
+                      np.zeros(0, np.int64))
+            if coeffs.size:
+                gae_coeff_stream = entropy.huffman_compress(coeffs)
+            dim = self.basis.shape[0]
+            index_blob = entropy.encode_index_sets(index_sets, dim)
+            binexp_blob = entropy.zlib_pack(np.asarray(binexps, np.uint8).tobytes())
+
+        return Archive(n_hyperblocks=n, hb_stream=hb_stream, bae_streams=bae_streams,
+                       gae_coeff_stream=gae_coeff_stream, gae_index_blob=index_blob,
+                       gae_binexp_blob=binexp_blob, n_values=hyperblocks.size)
+
+    def decompress(self, archive: Archive) -> np.ndarray:
+        cfg = self.cfg
+        n, k, d = archive.n_hyperblocks, cfg.k, cfg.block_elems
+        q_lh = entropy.huffman_decompress(archive.hb_stream).reshape(n, cfg.hb_latent)
+        lat = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
+        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params, jnp.asarray(lat)))
+        recon = y
+        for p, stream in zip(self.bae_params, archive.bae_streams):
+            q_lb = entropy.huffman_decompress(stream).reshape(n * k, cfg.bae_latent)
+            lb = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
+            r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb)))
+            recon = recon + r_hat.reshape(n, k, d)
+
+        if archive.gae_index_blob:
+            index_sets = entropy.decode_index_sets(archive.gae_index_blob)
+            binexps = np.frombuffer(entropy.zlib_unpack(archive.gae_binexp_blob),
+                                    np.uint8)
+            coeffs = (entropy.huffman_decompress(archive.gae_coeff_stream)
+                      if archive.gae_coeff_stream is not None else np.zeros(0, np.int64))
+            r_gae = self._gae_view(recon)
+            pos = 0
+            codes = []
+            for i, idx in enumerate(index_sets):
+                m = idx.size
+                codes.append(gae.GAEBlockCode(m=m, indices=idx,
+                                              qcoeffs=coeffs[pos:pos + m],
+                                              bin_exp=int(binexps[i])))
+                pos += m
+            out = gae.gae_decode_blocks(r_gae, self.basis, codes, cfg.gae_bin)
+            recon = self._gae_unview(out, recon.shape)
+        return recon
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        state = {"cfg": self.cfg,
+                 "hbae": jax.device_get(self.hbae_params),
+                 "bae": jax.device_get(self.bae_params),
+                 "basis": self.basis}
+        with open(path, "wb") as f:
+            pickle.dump(state, f)
+
+    @classmethod
+    def load(cls, path: str) -> "HierarchicalCompressor":
+        with open(path, "rb") as f:
+            state = pickle.load(f)
+        obj = cls(state["cfg"])
+        obj.hbae_params = state["hbae"]
+        obj.bae_params = state["bae"]
+        obj.basis = state["basis"]
+        return obj
+
+    def model_bytes(self) -> int:
+        total = sum(x.size * 4 for x in jax.tree.leaves((self.hbae_params,
+                                                         self.bae_params)))
+        if self.basis is not None:
+            total += self.basis.size * 4
+        return total

@@ -1,0 +1,33 @@
+"""Uniform quantization (paper Sec. II-E).
+
+Values are binned into uniform bins of width ``bin_size``; every value in a bin
+is represented by the bin's central value.  ``quantize`` returns integer bin
+indices (storable / entropy-codable), ``dequantize`` maps back to centers.
+
+Traceable under jit; also used inside Pallas kernels via the same formulas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize(x: Array, bin_size: float | Array) -> Array:
+    """float -> int32 bin index (round-to-nearest => bin centers)."""
+    return jnp.round(x / bin_size).astype(jnp.int32)
+
+
+def dequantize(q: Array, bin_size: float | Array, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * bin_size).astype(dtype)
+
+
+def quantize_dequantize(x: Array, bin_size: float | Array) -> Array:
+    """Fused round-trip: the value the decoder will see."""
+    return dequantize(quantize(x, bin_size), bin_size, dtype=x.dtype)
+
+
+def quantization_error_bound(bin_size: float, n: int) -> float:
+    """Worst-case l2 error of uniformly quantizing an n-vector: sqrt(n)*bin/2."""
+    return float(bin_size) * 0.5 * float(n) ** 0.5

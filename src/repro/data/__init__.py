@@ -1,0 +1,1 @@
+from repro.data import blocks, synthetic  # noqa: F401

@@ -1,0 +1,105 @@
+"""Deterministic, shardable, resumable-by-step LM token pipeline.
+
+Requirements from the fault-tolerance story (DESIGN.md §7): after a crash the
+runner restores step N and must see the EXACT batch stream it would have seen
+without the crash — so batches are a pure function of (step, shard).  No
+iterator state is ever checkpointed; ``batch_at(step)`` is the contract.
+
+The corpus here is a synthetic-but-structured Zipfian n-gram stream (offline
+container: no real corpora); real deployments swap ``SyntheticCorpus`` for a
+tokenized shard reader behind the same ``batch_at`` interface.  Host prefetch
+(depth >= 2) decouples host hiccups from the device stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    shard_index: int = 0          # this host's data shard
+    shard_count: int = 1
+    seed: int = 1234
+
+
+class SyntheticCorpus:
+    """Zipfian unigram mixture with a deterministic per-position bigram kick —
+    enough structure that a ~100M model's loss visibly drops, fully
+    reproducible from (seed, step, shard)."""
+
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks ** 1.1
+        self._probs = p / p.sum()
+        # deterministic bigram successor table: v -> (a*v + b) % vocab
+        rng = np.random.default_rng(cfg.seed)
+        self._a = int(rng.integers(1, cfg.vocab - 1) | 1)
+        self._b = int(rng.integers(0, cfg.vocab))
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (step, shard): {'tokens','labels'} int32 arrays of
+        shape (local_batch, seq_len)."""
+        cfg = self.cfg
+        assert cfg.global_batch % cfg.shard_count == 0
+        local = cfg.global_batch // cfg.shard_count
+        ss = np.random.SeedSequence(
+            entropy=cfg.seed, spawn_key=(step, cfg.shard_index))
+        rng = np.random.default_rng(ss)
+        base = rng.choice(cfg.vocab, size=(local, cfg.seq_len + 1),
+                          p=self._probs).astype(np.int64)
+        # bigram kick: with p=0.5 the next token is the deterministic successor
+        follow = rng.random((local, cfg.seq_len)) < 0.5
+        succ = (self._a * base[:, :-1] + self._b) % cfg.vocab
+        seq = base.copy()
+        seq[:, 1:] = np.where(follow, succ, base[:, 1:])
+        return {"tokens": seq[:, :-1].astype(np.int32),
+                "labels": seq[:, 1:].astype(np.int32)}
+
+
+class PrefetchIterator:
+    """Threaded prefetch (depth >= 2) over ``batch_at`` starting at ``step``."""
+
+    def __init__(self, corpus: SyntheticCorpus, start_step: int,
+                 depth: int = 2):
+        self.corpus = corpus
+        self.step = start_step
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        s = self.step
+        while not self._stop.is_set():
+            batch = self.corpus.batch_at(s)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((s, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            s += 1
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        _, batch = self.q.get()
+        return batch
+
+    def close(self) -> None:
+        self._stop.set()
+
+
+def make_iterator(cfg: TokenPipelineConfig, start_step: int,
+                  prefetch: int = 2) -> PrefetchIterator:
+    return PrefetchIterator(SyntheticCorpus(cfg), start_step, depth=prefetch)

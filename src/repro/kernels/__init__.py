@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §4).
+
+Each kernel is a package ``<name>/{kernel.py, ops.py, ref.py}``: the Pallas
+``pallas_call`` + BlockSpec tiling, the jit'd public wrapper (interpret-mode
+fallback off-TPU), and the pure-jnp oracle the tests sweep against.
+
+  flash_attention  — online-softmax causal GQA + sliding window (LM layers)
+  block_attention  — fused tiny-n hyper-block attention (HBAE, paper Eq. 6)
+  gae_project      — fused U^T r + c^2 (GAE, paper Eq. 9 / Algorithm 1 input)
+  quantize         — fused bin / dequant / sq-error (paper Sec. II-E)
+  ssd_scan         — Mamba-2 chunked SSD scan, state carried in VMEM
+"""

@@ -1,0 +1,67 @@
+"""Fused hyper-block attention Pallas kernel (HBAE, paper Eq. 6 core).
+
+TPU adaptation (DESIGN.md §4): the HBAE attends over only k <= 16 block
+embeddings of d = 128 per hyper-block — a *tiny-n, batch-huge* attention.
+FlashAttention-style KV streaming is pointless at n = 10; the win is batching
+``tb`` whole hyper-blocks into one VMEM tile of shape (tb, n, d) and fusing
+QK^T -> softmax -> PV for the whole tile so the intermediates (tb, n, n) never
+round-trip to HBM.  Softmax numerics are fp32 on-chip; I/O keeps the input
+dtype.  The grid is 1-D over hyper-block tiles — every cell independent
+("parallel" semantics).
+
+VMEM budget: 4 tensors x tb*n*d*4 B + scores tb*n*n*4 B; at tb=256, n=10,
+d=128 that's ~5.6 MB « 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _block_attn_kernel(q_ref, k_ref, v_ref, o_ref, *, heads: int):
+    q = q_ref[...].astype(jnp.float32)            # (tb, n, d)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    tb, n, dk = q.shape
+    dv = v.shape[-1]
+    hq = q.reshape(tb, n, heads, dk // heads)
+    hk = k.reshape(tb, n, heads, dk // heads)
+    hv = v.reshape(tb, n, heads, dv // heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", hq, hk,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dk // heads, jnp.float32))
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", w, hv,
+                     preferred_element_type=jnp.float32)
+    o_ref[...] = ctx.reshape(tb, n, dv).astype(o_ref.dtype)
+
+
+def block_attention_fwd(q: Array, k: Array, v: Array, *, heads: int = 1,
+                        tile_b: int = 256, interpret: bool = False) -> Array:
+    """q/k/v: (B, n, d) with B a multiple of tile_b (wrapper pads)."""
+    b, n, dk = q.shape
+    dv = v.shape[-1]
+    tile_b = min(tile_b, b)
+    assert b % tile_b == 0, (b, tile_b)
+    grid = (b // tile_b,)
+    kernel = functools.partial(_block_attn_kernel, heads=heads)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_b, n, dk), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((tile_b, n, dk), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((tile_b, n, dv), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile_b, n, dv), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, dv), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper around the hyper-block attention kernel.
+
+Handles arbitrary leading batch shape, pads the hyper-block batch to the tile
+size (padded rows compute garbage that is sliced away — softmax over real
+columns only, since padding is along batch, never along n), and interprets
+off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attention.kernel import block_attention_fwd
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("heads", "tile_b", "interpret"))
+def block_attention(q: Array, k: Array, v: Array, *, heads: int = 1,
+                    tile_b: int = 256, interpret: bool | None = None) -> Array:
+    """q/k/v: (..., n, d) -> (..., n, d_v)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    *lead, n, dk = q.shape
+    dv = v.shape[-1]
+    b = 1
+    for x in lead:
+        b *= x
+    qf = q.reshape(b, n, dk)
+    kf = k.reshape(b, n, dk)
+    vf = v.reshape(b, n, dv)
+    tb = min(tile_b, b)
+    pad = -b % tb
+    if pad:
+        qf = jnp.pad(qf, ((0, pad), (0, 0), (0, 0)))
+        kf = jnp.pad(kf, ((0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, pad), (0, 0), (0, 0)))
+    out = block_attention_fwd(qf, kf, vf, heads=heads, tile_b=tb,
+                              interpret=interpret)
+    if pad:
+        out = out[:b]
+    return out.reshape(*lead, n, dv)

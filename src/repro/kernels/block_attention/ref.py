@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the hyper-block attention kernel (paper Eqs. 2-3).
+
+Plain softmax self-attention over the k block embeddings of each hyper-block:
+q/k/v are (B, n, d) with n = blocks-per-hyper-block (tiny, <= 16) and B huge.
+Multi-head capable; heads=1 is the paper's configuration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def block_attention_ref(q: Array, k: Array, v: Array, *, heads: int = 1) -> Array:
+    b, n, dk = q.shape
+    dv = v.shape[-1]
+    hq = q.reshape(b, n, heads, dk // heads)
+    hk = k.reshape(b, n, heads, dk // heads)
+    hv = v.reshape(b, n, heads, dv // heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", hq, hk) / jnp.sqrt(dk // heads)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", w, hv)
+    return ctx.reshape(b, n, dv)

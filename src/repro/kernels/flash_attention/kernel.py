@@ -1,0 +1,132 @@
+"""FlashAttention Pallas TPU kernel: online-softmax causal GQA with optional
+sliding window.
+
+Tiling (DESIGN.md §4): the grid is (B, H, S/bq, T/bk) with the kv-block axis
+innermost and *sequential* ("arbitrary" dimension semantics) so the running
+softmax statistics (m, l) and the fp32 context accumulator live in VMEM
+scratch across kv iterations.  Query/key blocks are (bq, hd)/(bk, hd) VMEM
+tiles — hd (64–128) and bq/bk (128) are MXU-aligned.  GQA is expressed in the
+index maps: query head h reads kv head h // (H // KV), so KV tiles are
+streamed once per q-head group without materializing the repeated heads in
+HBM.  Softmax numerics are fp32 on-chip regardless of I/O dtype; fully-masked
+kv blocks (beyond the causal frontier or the sliding window) are skipped with
+``pl.when`` so the MXU never sees them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *,
+                 causal: bool, window: int, bq: int, bk: int,
+                 seq_q: int, seq_kv: int, scale: float):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    # absolute time indices of this tile (queries suffix-aligned to kv end)
+    off = seq_kv - seq_q
+    tq = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + off
+    tk = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: is any (tq, tk) pair in this tile live?
+    q_last = iq * bq + bq - 1 + off
+    q_first = iq * bq + off
+    k_first = jk * bk
+    k_last = jk * bk + bk - 1
+    live = True
+    if causal:
+        live = jnp.logical_and(live, k_first <= q_last)
+    if window:
+        live = jnp.logical_and(live, k_last > q_first - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (tk < seq_kv)
+        if causal:
+            mask &= tk <= tq
+        if window:
+            mask &= tq - tk < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        # explicit mask multiply: rows fully masked in this tile would other-
+        # wise see exp(NEG_INF - NEG_INF) = 1 and corrupt the accumulator.
+        p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+        l_i[...] = l_i[...] * alpha + jnp.sum(p, axis=-1)
+        m_i[...] = m_new
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_i[...], 1e-30)[:, None]
+        o_ref[0, 0, ...] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, bq: int = 128, bk: int = 128,
+                        true_q: int | None = None, true_kv: int | None = None,
+                        interpret: bool = False) -> Array:
+    """q: (B, H, S, hd), k/v: (B, KV, T, hd) — head-major layout.
+
+    The public wrapper (``ops.flash_attention``) transposes from the model's
+    (B, S, H, hd) layout and pads S/T to tile multiples; ``true_q``/``true_kv``
+    carry the unpadded lengths so padded keys are masked exactly in-kernel.
+    """
+    b, h, s, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    grid = (b, h, s // bq, t // bk)
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, bq=bq, bk=bk,
+        seq_q=true_q or s, seq_kv=true_kv or t, scale=1.0 / (hd ** 0.5))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, ii, jj, g=group: (bb, hh // g, jj, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bb, hh, ii, jj, g=group: (bb, hh // g, jj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

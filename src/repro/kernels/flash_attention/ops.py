@@ -1,0 +1,55 @@
+"""Jit'd public wrapper around the FlashAttention Pallas kernel.
+
+Accepts the model layout (B, S, H, hd) / (B, T, KV, hd), transposes to the
+kernel's head-major layout, pads sequence lengths to tile multiples (padding
+keys are masked inside the kernel via absolute-time bounds) and falls back to
+interpret mode off-TPU so the same call sites run everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+Array = jax.Array
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> Array:
+    """q: (B, S, H, hd), k/v: (B, T, KV, hd) -> (B, S, H, hd)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+
+    bq_ = min(bq, max(s, 8))
+    bk_ = min(bk, max(t, 8))
+    s_pad = -s % bq_
+    t_pad = -t % bk_
+
+    qh = jnp.moveaxis(q, 2, 1)                       # (B, H, S, hd)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    if s_pad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    if t_pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+
+    # Padded kv positions have absolute time >= true_kv and are masked
+    # in-kernel; padded q rows produce garbage rows that are sliced away.
+    out = flash_attention_fwd(qh, kh, vh, causal=causal, window=window,
+                              bq=bq_, bk=bk_, true_q=s, true_kv=t,
+                              interpret=interpret)
+    out = out[:, :, :s] if s_pad else out
+    return jnp.moveaxis(out, 1, 2)

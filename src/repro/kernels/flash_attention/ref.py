@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Grouped-query attention over (B, S, H, hd) queries and (B, T, KV, hd) keys and
+values, fp32 softmax, optional causal and sliding-window masks.  This is the
+semantics the Pallas kernel must reproduce bit-for-bit (up to fp accumulation
+order) and what the CPU fallback in ``repro.models.attention`` computes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0) -> Array:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    scores = scores.astype(jnp.float32)
+    i = jnp.arange(s)[:, None] + (t - s)       # query absolute time (suffix align)
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return ctx.reshape(b, s, h, hd)

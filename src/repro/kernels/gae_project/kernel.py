@@ -1,0 +1,69 @@
+"""Fused GAE projection Pallas kernel: c = R @ U and c2 = c^2 in one pass.
+
+This is the MXU hot-spot of the GAE encoder (DESIGN.md §4): every block
+residual is projected onto the PCA basis (paper Eq. 9) and the squared
+coefficients — the sort key of Algorithm 1 — are produced in the same VMEM
+round-trip, so the (N, D) coefficient tensor is squared before it ever leaves
+the chip.
+
+Tiling: grid (N/tn, D/td, D/tk) with the contraction axis innermost
+(sequential); an fp32 VMEM accumulator carries the partial dot products.  The
+full basis never needs to be resident (unlike a naive "keep U in VMEM" port):
+for XGC's D = 1521 the basis tile stream is (tk, td) = (512, 512) = 1 MB.
+MXU-aligned tiles; both outputs are written on the final contraction step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _gae_project_kernel(r_ref, u_ref, c_ref, c2_ref, acc):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        r_ref[...].astype(jnp.float32), u_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _finalize():
+        c = acc[...]
+        c_ref[...] = c.astype(c_ref.dtype)
+        c2_ref[...] = jnp.square(c).astype(c2_ref.dtype)
+
+
+def gae_project_fwd(residuals: Array, basis: Array, *, tn: int = 256,
+                    td: int = 512, tk: int = 512,
+                    interpret: bool = False) -> tuple[Array, Array]:
+    """residuals: (N, D), basis: (D, Dout). Shapes must divide the tiles
+    (wrapper pads). Returns (c, c2) fp32."""
+    n, d = residuals.shape
+    dout = basis.shape[1]
+    tn = min(tn, n)
+    td = min(td, dout)
+    tk = min(tk, d)
+    assert n % tn == 0 and dout % td == 0 and d % tk == 0, (n, d, dout, tn, td, tk)
+    grid = (n // tn, dout // td, d // tk)
+    return pl.pallas_call(
+        _gae_project_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tn, tk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((tk, td), lambda i, j, k: (k, j))],
+        out_specs=[pl.BlockSpec((tn, td), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((tn, td), lambda i, j, k: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((n, dout), jnp.float32),
+                   jax.ShapeDtypeStruct((n, dout), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tn, td), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(residuals, basis)

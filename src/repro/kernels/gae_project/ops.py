@@ -1,0 +1,36 @@
+"""Jit'd public wrapper around the fused GAE projection kernel.
+
+Pads (N, D) to tile multiples — zero padding is exact for a matmul — and
+slices the outputs back; interprets off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gae_project.kernel import gae_project_fwd
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "td", "tk", "interpret"))
+def gae_project(residuals: Array, basis: Array, *, tn: int = 256,
+                td: int = 512, tk: int = 512,
+                interpret: bool | None = None) -> tuple[Array, Array]:
+    """residuals: (N, D), basis: (D, Dout) -> (c, c2), both (N, Dout) fp32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = residuals.shape
+    dout = basis.shape[1]
+    tn_ = min(tn, max(n, 8))
+    td_ = min(td, max(dout, 8))
+    tk_ = min(tk, max(d, 8))
+    pn, pd, pdo = -n % tn_, -d % tk_, -dout % td_
+    r = jnp.pad(residuals, ((0, pn), (0, pd))) if (pn or pd) else residuals
+    u = jnp.pad(basis, ((0, pd), (0, pdo))) if (pd or pdo) else basis
+    c, c2 = gae_project_fwd(r, u, tn=tn_, td=td_, tk=tk_, interpret=interpret)
+    if pn or pdo:
+        c, c2 = c[:n, :dout], c2[:n, :dout]
+    return c, c2

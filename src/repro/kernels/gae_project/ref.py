@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused GAE projection kernel (paper Eq. 9 + the
+c_k^2 ranking input of Algorithm 1): c = r @ U and c2 = c*c in one pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gae_project_ref(residuals: Array, basis: Array) -> tuple[Array, Array]:
+    """residuals: (N, D), basis: (D, D) columns = principal vectors.
+
+    Returns (c, c2) with c = residuals @ basis  (= U^T r per block, Eq. 9).
+    """
+    c = residuals.astype(jnp.float32) @ basis.astype(jnp.float32)
+    return c, jnp.square(c)

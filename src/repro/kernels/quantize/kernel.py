@@ -1,0 +1,53 @@
+"""Fused quantization Pallas kernel (paper Sec. II-E).
+
+One HBM read of x produces all three tensors the compressor consumes: the
+int32 bin index (entropy-coding input), the dequantized center value (what the
+decoder will reconstruct — fed straight into the downstream residual), and the
+squared quantization error (the `(c - q(c))^2` term of the one-shot GAE
+selection, DESIGN.md §4.1).  Unfused, these are three elementwise passes over
+HBM; fused they are one read + three writes at VPU throughput.
+
+Elementwise, so tiling is trivial: 2-D tiles over a flattened-to-2D view,
+"parallel" semantics, bin_size as a static compile-time constant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _quantize_kernel(x_ref, q_ref, deq_ref, err2_ref, *, bin_size: float):
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.round(x / bin_size)
+    deq = q * bin_size
+    q_ref[...] = q.astype(jnp.int32)
+    deq_ref[...] = deq.astype(deq_ref.dtype)
+    err2_ref[...] = jnp.square(x - deq)
+
+
+def quantize_fused_fwd(x: Array, *, bin_size: float, tile: tuple[int, int] = (256, 512),
+                       interpret: bool = False) -> tuple[Array, Array, Array]:
+    """x: (R, C) with tile-divisible shape (wrapper pads)."""
+    r, c = x.shape
+    tr = min(tile[0], r)
+    tc = min(tile[1], c)
+    assert r % tr == 0 and c % tc == 0, (x.shape, tile)
+    kernel = functools.partial(_quantize_kernel, bin_size=bin_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // tr, c // tc),
+        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
+                   jax.ShapeDtypeStruct((r, c), x.dtype),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x)

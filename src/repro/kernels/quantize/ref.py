@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused quantize kernel (paper Sec. II-E uniform
+binning): bin index, dequantized center value, and squared quantization error
+in a single pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_fused_ref(x: Array, bin_size: float) -> tuple[Array, Array, Array]:
+    """x: any shape float -> (q int32, deq same-dtype, err2 fp32)."""
+    q = jnp.round(x / bin_size).astype(jnp.int32)
+    deq = (q.astype(jnp.float32) * bin_size).astype(x.dtype)
+    err2 = jnp.square(x.astype(jnp.float32) - deq.astype(jnp.float32))
+    return q, deq, err2

@@ -1,0 +1,111 @@
+"""SSD (Mamba-2) chunked-scan Pallas kernel.
+
+The SSD layer is exactly the structure a TPU likes (DESIGN.md §4): chunk-local
+quadratic math = three MXU matmuls per (Q, P/N) tile, plus an O(S/Q)
+inter-chunk recurrence with a tiny (P, N) state.  The GPU reference
+implementation splits these into separate kernels with the state bounced
+through HBM; here the grid is (B, H, S/Q) with the *chunk axis sequential* and
+the running state h (P, N) carried in fp32 VMEM scratch across grid steps —
+the state never touches HBM except for the single final write.
+
+Per grid step, resident in VMEM: x (Q, P), dt (Q,), B/C (Q, N), the (Q, Q)
+intra-chunk decay matrix, and the state (P, N).  At Q = 256, P = 64, N = 128
+that's ~0.6 MB — far under budget, so multiple heads' programs can overlap
+DMA with compute.
+
+All math fp32 on-chip (exp/cumsum numerics); I/O in the model's compute dtype.
+GQA-style B/C group sharing (G < H) is expressed in the index maps, like the
+flash kernel's KV maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref, h_acc):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_acc[...] = jnp.zeros_like(h_acc)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))    # scalar
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # (Q, N)
+
+    xdt = x * dt[:, None]
+    cum = jnp.cumsum(dt * a)                          # (Q,)
+
+    # intra-chunk: scores(s,t) = (c_s . b_t) exp(cum_s - cum_t) for t <= s
+    diff = cum[:, None] - cum[None, :]
+    q = x.shape[0]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * decay
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += exp(cum_s) C_s . h_in   (h_in = state entering chunk)
+    h_in = h_acc[...]                                 # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h = exp(cum_Q) h_in + sum_t exp(cum_Q - cum_t) b_t xdt_t
+    edge = jnp.exp(cum[-1] - cum)                     # (Q,)
+    cstate = jax.lax.dot_general(xdt * edge[:, None], b,
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (P, N)
+    h_acc[...] = jnp.exp(cum[-1]) * h_in + cstate
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_ref[0, 0, ...] = h_acc[...]
+
+
+def ssd_scan_fwd(x: Array, dt: Array, a_log: Array, b: Array, c: Array, *,
+                 chunk: int, interpret: bool = False) -> tuple[Array, Array]:
+    """x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,)  b,c: (B,S,G,N), S % chunk == 0.
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0 and h % g == 0, (s, chunk, h, g)
+    rep = h // g
+    grid = (bsz, h, s // chunk)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bb, hh, cc, r=rep: (bb, cc, hh // r, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bb, hh, cc, r=rep: (bb, cc, hh // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+                   jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper around the SSD chunked-scan kernel.
+
+Pads S up to a chunk multiple when needed (padded steps use dt = 0, which is
+an exact no-op for both the output rows we discard and the carried state:
+decay exp(0)=1, input contribution x*dt = 0) and interprets off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: Array, dt: Array, a_log: Array, b: Array, c: Array, *, chunk: int,
+        interpret: bool | None = None) -> tuple[Array, Array]:
+    """x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,)  b,c: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, s, h, p = x.shape
+    q = min(chunk, s)
+    pad = -s % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))     # dt=0 => exact no-op
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, state = ssd_scan_fwd(x, dt, a_log, b, c, chunk=q, interpret=interpret)
+    if pad:
+        y = y[:, :s]
+    return y, state

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the SSD (Mamba-2 state-space duality) scan kernel.
+
+Identical math to ``repro.models.ssd.ssd_ref`` but kept self-contained here so
+kernel tests depend only on the kernel package.  Computes, per head with
+scalar decay A = -exp(A_log):
+
+    y_s = sum_{t<=s} C_s^T B_t (dt_t x_t) exp(cum_s - cum_t) ,
+
+chunked: quadratic attention-like math inside chunks + an inter-chunk state
+recurrence carrying h in (P, N) per (batch, head).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_scan_ref(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                 chunk: int) -> tuple[Array, Array]:
+    """x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,)  b,c: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    xdt = x.astype(jnp.float32) * dt32[..., None]
+    cum = jnp.cumsum((dt32 * a).reshape(bsz, nc, chunk, h), axis=2)
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    bc = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcshn,bcthn->bcsth", cc, bc) * decay
+    y = jnp.einsum("bcsth,bcthp->bcshp", scores, xc)
+
+    edge = jnp.exp(cum[:, :, -1:, :] - cum)
+    cstate = jnp.einsum("bcth,bcthn,bcthp->bchpn", edge, bc, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def scan_fn(carry, inp):
+        cs, cd = inp
+        return carry * cd[:, :, None, None] + cs, carry
+
+    final, h_in = jax.lax.scan(scan_fn, jnp.zeros((bsz, h, p, n), jnp.float32),
+                               (cstate.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcsh,bcshn,bchpn->bcshp", jnp.exp(cum), cc, h_in)
+    y = (y + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final

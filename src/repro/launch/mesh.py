@@ -1,0 +1,40 @@
+"""Production meshes.  FUNCTIONS, not module-level constants — importing this
+module never touches jax device state (smoke tests must keep seeing 1 CPU
+device; only launch/dryrun.py forces 512 placeholder devices).
+
+Single pod: (16, 16) ("data", "model") = 256 chips (TPU v5e-class pod).
+Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips; the ``pod`` axis
+extends data parallelism across pods (gradient all-reduce crosses DCI) — the
+standard multi-pod layout (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests / small-scale runs / PP layouts)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Whatever this host has, as (data, model) — smoke/integration tests."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return n
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

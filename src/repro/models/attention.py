@@ -1,0 +1,184 @@
+"""GQA attention: full-sequence (train/prefill) and cached decode paths.
+
+Supports: grouped-query / multi-query heads, RoPE, QKV bias (qwen1.5/qwen2),
+qk-norm (qwen3), sliding-window local attention with a ring-buffer KV cache
+(recurrentgemma, long-context decode), cross-attention (whisper / llama-vision),
+and head padding for tensor parallelism (DESIGN.md §5).
+
+Weight layout (matched by the partition rules in ``repro.parallel.sharding``):
+    wq: (d, H, hd)   wk/wv: (d, KV, hd)   wo: (H, hd, d)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, lecun_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, *,
+              qkv_bias: bool = False, qk_norm: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": lecun_init(kq, (d, n_heads, head_dim), fan_in=d),
+        "wk": lecun_init(kk, (d, n_kv, head_dim), fan_in=d),
+        "wv": lecun_init(kv, (d, n_kv, head_dim), fan_in=d),
+        "wo": lecun_init(ko, (n_heads, head_dim, d), fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim)
+        p["k_norm"] = rmsnorm_init(head_dim)
+    return p
+
+
+def _project_qkv(params: dict, x: Array, x_kv: Array, positions, theta,
+                 rope: bool) -> tuple[Array, Array, Array]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _gqa_scores_ctx(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd); grouped einsum without repeating KV."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return ctx.reshape(b, s, h, hd)
+
+
+def full_attention(params: dict, x: Array, *, positions: Array,
+                   theta: float = 1e4, causal: bool = True, window: int = 0,
+                   rope: bool = True, x_kv: Optional[Array] = None,
+                   use_kernel: bool = False) -> Array:
+    """Train/prefill path. x: (B,S,d). ``x_kv`` enables cross-attention
+    (positions apply to q only; k/v unrotated, mask full)."""
+    cross = x_kv is not None
+    q, k, v = _project_qkv(params, x, x_kv if cross else x, positions, theta,
+                           rope and not cross)
+    if cross:
+        mask = None
+    else:
+        s = x.shape[1]
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        m = (j <= i) if causal else jnp.ones((s, s), bool)
+        if window:
+            m = m & (i - j < window)
+        mask = m[None, None, None, :, :]
+    if use_kernel and not cross:
+        from repro.kernels.flash_attention import ops as fa_ops
+        ctx = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        ctx = _gqa_scores_ctx(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array       # (B, S_cache, KV, hd)
+    v: Array
+    pos: Array     # scalar int32: number of tokens already in the cache
+    window: int    # 0 = full cache; >0 = ring buffer of this size
+
+    @staticmethod
+    def zeros(batch: int, length: int, n_kv: int, head_dim: int, dtype,
+              window: int = 0) -> "KVCache":
+        size = min(length, window) if window else length
+        return KVCache(k=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+                       v=jnp.zeros((batch, size, n_kv, head_dim), dtype),
+                       pos=jnp.zeros((), jnp.int32), window=window)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.pos), c.window),
+    lambda window, leaves: KVCache(*leaves, window=window))
+
+
+def decode_attention(params: dict, x: Array, cache: KVCache, *,
+                     theta: float = 1e4, rope: bool = True,
+                     kv_cross: Optional[tuple[Array, Array]] = None
+                     ) -> tuple[Array, KVCache]:
+    """One-token decode. x: (B,1,d).  With ``kv_cross`` (precomputed encoder
+    K/V), attends those instead and leaves the cache untouched."""
+    dt = x.dtype
+    pos = cache.pos
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if kv_cross is not None:
+        q, _, _ = _project_qkv(params, x, x, positions, theta, rope=False)
+        k, v = kv_cross
+        ctx = _gqa_scores_ctx(q, k, v, mask=None)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+        return out, cache
+
+    q, k_new, v_new = _project_qkv(params, x, x, positions, theta, rope)
+    slot = jnp.where(cache.window > 0, pos % jnp.maximum(cache.window, 1), pos)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    # pin the updated cache's sharding: without this GSPMD's propagation can
+    # settle on a replicated cache and all-gather the ENTIRE KV per step —
+    # observed as 4.4 TB/device of gathers on deepseek decode_32k (§Perf)
+    k = constrain(k, "kv_cache")
+    v = constrain(v, "kv_cache")
+    t = jnp.arange(k.shape[1])
+    if cache.window:
+        valid = t < jnp.minimum(pos + 1, cache.window)       # ring: all live slots
+    else:
+        valid = t <= pos
+    mask = valid[None, None, None, None, :]
+    ctx = _gqa_scores_ctx(q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+    return out, KVCache(k=k, v=v, pos=pos + 1, window=cache.window)
+
+
+def prefill_cache(params: dict, x: Array, *, positions: Array, theta: float,
+                  rope: bool, max_len: int, window: int = 0) -> KVCache:
+    """Build a cache from a full prompt (keys stored rotated)."""
+    _, k, v = _project_qkv(params, x, x, positions, theta, rope)
+    b, s = x.shape[0], x.shape[1]
+    cache = KVCache.zeros(b, max_len, k.shape[2], k.shape[3], k.dtype, window)
+    if window and s > window:
+        # ring-buffer invariant: key of absolute time t lives at slot t % window
+        times = jnp.arange(s - window, s)
+        slots = times % window
+        newk = cache.k.at[:, slots].set(k[:, -window:])
+        newv = cache.v.at[:, slots].set(v[:, -window:])
+    else:
+        newk = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        newv = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+    return KVCache(k=newk, v=newv, pos=jnp.asarray(s, jnp.int32), window=window)

@@ -1,0 +1,225 @@
+"""Shared model building blocks (pure JAX, params = nested dicts).
+
+Conventions:
+  * params are float32 at init; cast to RunConfig.param_dtype by the trainer.
+  * all functions take explicit shapes — nothing reads global state.
+  * weight layouts are chosen so partition rules can match on path names:
+      ("embed", "w")        -> (vocab, d)
+      ("...attn", "wq")     -> (d, H, hd)        sharded on H
+      ("...mlp", "w_in")    -> (d, f)            sharded on f
+      ("...moe", "w1")      -> (E, d, f)         sharded on E (or f)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def he_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    return jax.random.normal(key, shape, dtype) * (2.0 / fan_in) ** 0.5
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / fan_in) ** 0.5
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(n: int, d: int) -> Array:
+    """Fixed sinusoidal embeddings (whisper encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angles = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int) -> dict:
+    return {"w": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params: dict, tokens: Array) -> Array:
+    return params["w"][tokens]
+
+
+def unembed_init(key, d: int, vocab: int) -> dict:
+    return {"w": lecun_init(key, (d, vocab))}
+
+
+def unembed(params: dict, x: Array) -> Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": lecun_init(k1, (d, f)),
+            "w_in": lecun_init(k2, (d, f)),
+            "w_out": lecun_init(k3, (f, d), fan_in=f)}
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    dt = x.dtype
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    return (gate * (x @ params["w_in"].astype(dt))) @ params["w_out"].astype(dt)
+
+
+def gelu_mlp_init(key, d: int, f: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w_in": lecun_init(k1, (d, f)), "b_in": jnp.zeros((f,), jnp.float32),
+            "w_out": lecun_init(k2, (f, d), fan_in=f),
+            "b_out": jnp.zeros((d,), jnp.float32)}
+
+
+def gelu_mlp(params: dict, x: Array) -> Array:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ params["w_in"].astype(dt) + params["b_in"].astype(dt))
+    return h @ params["w_out"].astype(dt) + params["b_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# layer-stack application: scanned (compact HLO) or unrolled (cost-faithful)
+# ---------------------------------------------------------------------------
+
+def apply_stack(body, carry, xs, *, unroll: bool):
+    """Run ``body(carry, layer_slice) -> (carry, y)`` over the leading axis of
+    ``xs``.
+
+    ``unroll=False`` -> ``jax.lax.scan``: O(1) HLO size in depth (default for
+    training/serving).  ``unroll=True`` -> a Python loop over layer indices:
+    the compiled module contains every layer, so ``cost_analysis()`` and the
+    collective-bytes sweep count each layer's FLOPs/bytes/collectives — XLA
+    reports while-loop bodies ONCE, which would undercount a scanned stack by
+    the trip count (launch/dryrun.py lowers with unroll=True for exactly this
+    reason; see DESIGN.md §8).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda p: p[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] == ():
+        return carry, ()
+    y_stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, y_stacked
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: Array, labels: Array, vocab: int) -> Array:
+    """Mean CE over all positions; labels >= vocab (padding ids) are masked."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab)
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def chunked_ce_loss(x: Array, unembed_w: Array, labels: Array, vocab: int,
+                    chunk: int, logit_mask_from: int = 0,
+                    unroll: bool = False) -> Array:
+    """Fused LM-head + CE, sequence-chunked (§Perf hillclimb lever).
+
+    The baseline path materializes logits (B, S, V) in compute dtype AND an
+    fp32 upcast — at (256, 4096, 152k) that is the single largest HBM tensor
+    of the train step.  Here the head matmul + logsumexp + gold-gather run
+    per sequence chunk inside ``lax.map``, so the live logits buffer is
+    (B, chunk, V) and the full tensor never exists.  Identical math (exact,
+    not an approximation); backward recomputes per-chunk logits (that trade
+    is the point: logits are compute-cheap, byte-heavy).
+
+    x: (B, S, D) final hidden states;  unembed_w: (D, V_padded);
+    ``logit_mask_from``: columns >= this are padding (masked to -inf).
+    """
+    b, s, d = x.shape
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)       # (n, B, c, D)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)        # (n, B, c)
+    w = unembed_w.astype(x.dtype)
+    vpad = w.shape[1]
+
+    def one(args):
+        xi, li = args                                          # (B,c,D),(B,c)
+        logits = (xi @ w).astype(jnp.float32)                  # (B, c, Vpad)
+        if logit_mask_from and logit_mask_from < vpad:
+            col_mask = jnp.where(jnp.arange(vpad) < logit_mask_from, 0.0,
+                                 -1e30)
+            logits = logits + col_mask
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        mask = (li >= 0) & (li < vocab)
+        nll = jnp.where(mask, logz - gold, 0.0)
+        return nll.sum(), mask.sum()
+
+    if unroll:      # cost-faithful HLO for the dry-run (DESIGN.md §4.7)
+        outs = [one((xc[i], lc[i])) for i in range(n)]
+        nll_total = sum(o[0] for o in outs)
+        cnt_total = sum(o[1] for o in outs)
+        return nll_total / jnp.maximum(cnt_total, 1)
+    nlls, counts = jax.lax.map(one, (xc, lc))
+    return nlls.sum() / jnp.maximum(counts.sum(), 1)

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer with sort-based static-capacity dispatch.
+
+Rather than the dense one-hot dispatch einsum (whose 0/1 "matmul" FLOPs dwarf
+the expert FLOPs at large S — it would poison the roofline's useful-FLOPs
+ratio), tokens are routed by sorting (token, slot) pairs by expert id and
+gathering each expert's segment into a static (E, C, D) buffer:
+
+    FLOPs = 2 * E * C * (3 * D * F)   with   C = ceil(T * top_k * cf / E)
+
+i.e. proportional to *active* tokens.  Gathers/scatters are memory ops.  Over-
+capacity tokens are dropped (standard "dropping" MoE semantics; capacity_factor
+controls the head-room).  Expert weights are laid out (E, D, F) so EP shards
+the leading expert axis (llama4: 16 experts / 16-way model axis) and falls back
+to F-sharding when E doesn't divide the axis (granite: 40 experts).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import lecun_init
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def moe_init(key, d: int, f: int, n_experts: int, *, shared_expert: bool,
+             shared_f: Optional[int] = None) -> dict:
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "router": lecun_init(kr, (d, n_experts)),
+        "w_gate": lecun_init(k1, (n_experts, d, f), fan_in=d),
+        "w_in": lecun_init(k2, (n_experts, d, f), fan_in=d),
+        "w_out": lecun_init(k3, (n_experts, f, d), fan_in=f),
+    }
+    if shared_expert:
+        from repro.models.common import swiglu_init
+        p["shared"] = swiglu_init(ks, d, shared_f or f)
+    return p
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(tokens * top_k * cf / n_experts) + 1
+    return max(8, min(c, tokens))
+
+
+def moe_apply(params: dict, x: Array, *, top_k: int,
+              capacity_factor: float = 1.25, dispatch_groups: int = 0) -> Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    ``dispatch_groups`` > 1 = hierarchical dispatch (§Perf llama4 it4):
+    tokens are split into G groups (sharded over the data axis) and each
+    group routes/sorts/dispatches its OWN tokens with per-group capacity —
+    the global 1M-token argsort + gather/scatter that otherwise forces
+    cross-shard data movement becomes G independent shard-local dispatches
+    (the standard per-device-capacity MoE semantics).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    if dispatch_groups > 1:
+        t = b * s
+        assert t % dispatch_groups == 0
+        xg = x.reshape(dispatch_groups, t // dispatch_groups, d)
+        xg = constrain(xg, "tokens_grouped")
+        yg = jax.vmap(lambda g: _dispatch_tokens(
+            params, g, top_k=top_k, capacity_factor=capacity_factor))(xg)
+        return constrain(yg, "tokens_grouped").reshape(b, s, d)
+    y = _dispatch_tokens(params, x.reshape(b * s, d), top_k=top_k,
+                         capacity_factor=capacity_factor)
+    return y.reshape(b, s, d)
+
+
+def _dispatch_tokens(params: dict, xf: Array, *, top_k: int,
+                     capacity_factor: float) -> Array:
+    """Sort-based dispatch over a flat (T, D) token table (module docstring)."""
+    t, d = xf.shape
+    e = params["router"].shape[1]
+    xf = constrain(xf, "tokens_flat")
+    dt = xf.dtype
+
+    gates = jax.nn.softmax((xf @ params["router"].astype(dt)).astype(jnp.float32))
+    weights, expert_idx = jax.lax.top_k(gates, top_k)            # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    c = _capacity(t, top_k, e, capacity_factor)
+    flat_expert = expert_idx.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_expert)                              # stable
+    sorted_expert = flat_expert[order]
+    # position of each routed slot within its expert segment
+    seg_starts = jnp.cumsum(jnp.bincount(sorted_expert, length=e)) - \
+        jnp.bincount(sorted_expert, length=e)
+    pos_in_expert = jnp.arange(t * top_k) - seg_starts[sorted_expert]
+    keep = pos_in_expert < c
+    token_of = order // top_k                                     # source token
+    buf_slot = sorted_expert * c + jnp.where(keep, pos_in_expert, 0)
+
+    # gather tokens into the (E*C, D) buffer; over-capacity slots target the
+    # out-of-bounds index e*c and are dropped by the scatter itself
+    buffer = jnp.zeros((e * c, d), dt)
+    buffer = buffer.at[jnp.where(keep, buf_slot, e * c)].set(
+        xf[token_of], mode="drop")
+    # NOTE(§Perf llama4 iteration 1, REFUTED): pinning P("model",None,None)
+    # on these buffers made GSPMD trade the dispatch all-to-all for larger
+    # all-gathers (+8.9% collective) — GSPMD's own propagation picks the
+    # better layout here, so the buffers are left unconstrained.
+    hidden = buffer.reshape(e, c, d)
+
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hidden, params["w_gate"].astype(dt)))
+    up = jnp.einsum("ecd,edf->ecf", hidden, params["w_in"].astype(dt))
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, params["w_out"].astype(dt))
+    out_flat = out_buf.reshape(e * c, d)
+
+    # scatter back with combine weights
+    w_of_slot = weights.reshape(-1)[order]                        # (T*k,)
+    contrib = jnp.where(keep[:, None], out_flat[buf_slot] * w_of_slot[:, None]
+                        .astype(dt), 0.0)
+    y = jnp.zeros((t, d), dt).at[token_of].add(contrib)
+    y = constrain(y, "tokens_flat")
+
+    if "shared" in params:
+        from repro.models.common import swiglu
+        y = y + swiglu(params["shared"], xf)
+    return y
+
+
+def moe_router_stats(params: dict, x: Array, top_k: int) -> dict:
+    """Load-balance diagnostics (fraction of dropped tokens, expert load)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    gates = jax.nn.softmax((xf @ params["router"].astype(x.dtype)).astype(jnp.float32))
+    _, expert_idx = jax.lax.top_k(gates, top_k)
+    load = jnp.bincount(expert_idx.reshape(-1), length=params["router"].shape[1])
+    return {"expert_load": load, "load_cv": jnp.std(load.astype(jnp.float32)) /
+            jnp.maximum(jnp.mean(load.astype(jnp.float32)), 1e-9)}

@@ -1,0 +1,117 @@
+"""Arch-id -> model dispatch + ShapeDtypeStruct input specs for every
+(architecture x input-shape) dry-run cell.
+
+``input_specs`` returns exactly what ``train_step`` / ``prefill_step`` /
+``serve_step`` consume — weak-type-correct stand-ins, no device allocation.
+Modality frontends are stubs per the assignment: audio supplies precomputed
+frame embeddings, VLM supplies precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    forward: Callable                # (params, cfg, run, tokens, ...) -> logits
+    train_loss: Callable             # (params, cfg, run, batch) -> scalar
+    init_decode_state: Callable      # (params, cfg, run, batch, max_len, ...) -> state
+    decode_step: Callable            # (params, cfg, run, token, state) -> (logits, state)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+    elif cfg.family == "hybrid":
+        from repro.models import rglru as m
+    elif cfg.family == "ssm":
+        from repro.models import ssd as m
+    elif cfg.family == "audio":
+        from repro.models import whisper as m
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return ModelApi(init_params=m.init_params, forward=m.forward,
+                    train_loss=m.train_loss,
+                    init_decode_state=m.init_decode_state,
+                    decode_step=m.decode_step)
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"tokens": _f((b, s), jnp.int32),
+                             "labels": _f((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = _f((b, cfg.n_frames, cfg.d_model),
+                             jnp.dtype(run.compute_dtype))
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = _f((b, cfg.n_vision_tokens, cfg.d_model),
+                                    jnp.dtype(run.compute_dtype))
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig) -> dict:
+    batch = train_batch_specs(cfg, run, shape)
+    del batch["labels"]
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig) -> dict:
+    """Token + decode-state ShapeDtypeStructs via eval_shape (no allocation)."""
+    api = get_model(cfg)
+    b = shape.global_batch
+    params_shape = jax.eval_shape(
+        lambda k: api.init_params(k, cfg, run), jax.random.PRNGKey(0))
+
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = _f((b, cfg.n_frames, cfg.d_model),
+                              jnp.dtype(run.compute_dtype))
+    if cfg.family == "vlm":
+        kwargs["vision_embeds"] = _f((b, cfg.n_vision_tokens, cfg.d_model),
+                                     jnp.dtype(run.compute_dtype))
+
+    state_shape = jax.eval_shape(
+        lambda p, **kw: api.init_decode_state(p, cfg, run, b, shape.seq_len, **kw),
+        params_shape, **kwargs)
+    return {"token": _f((b, 1), jnp.int32), "state": state_shape,
+            "params": params_shape}
+
+
+def params_specs(cfg: ModelConfig, run: RunConfig):
+    api = get_model(cfg)
+    return jax.eval_shape(lambda k: api.init_params(k, cfg, run),
+                          jax.random.PRNGKey(0))
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (per assignment: the full
+    configs are exercised only via the dry-run)."""
+    changes: dict[str, Any] = dict(
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=64, n_heads=4, n_kv_heads=min(max(1, cfg.n_kv_heads // 4), 4),
+        d_ff=128 if cfg.d_ff else 0, vocab=512, head_dim=16, max_seq=512)
+    if cfg.family == "moe":
+        changes.update(n_experts=4, top_k=min(cfg.top_k, 2), d_ff=64)
+    if cfg.family == "hybrid":
+        changes.update(n_layers=5, attn_period=3, window=16, lru_width=64)
+    if cfg.family == "ssm":
+        changes.update(ssm_state=16, ssm_headdim=16, ssm_chunk=16,
+                       n_heads=1, n_kv_heads=1)
+    if cfg.family == "audio":
+        changes.update(n_enc_layers=2, n_frames=24)
+    if cfg.family == "vlm":
+        changes.update(cross_period=5, n_layers=5, n_vision_tokens=16)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,290 @@
+"""Griffin / RecurrentGemma hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern is (recurrent, recurrent, local-attention) triples (Griffin's
+2:1); 38 layers = 12 scanned triples + 2 unscanned tail recurrent layers.
+
+RG-LRU (De et al. 2024):  r,i = sigma(W x + b);  a = exp(-c softplus(L) r)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Training uses ``lax.associative_scan`` over the diagonal recurrence (O(log S)
+depth — the TPU-native alternative to a CUDA linear-scan kernel); decode is a
+single elementwise state update (state is O(1) — this is why the arch runs the
+long_500k cell).  The local-attention KV cache is a ``window``-sized ring
+buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (apply_stack, cross_entropy_loss, embed,
+                                 embedding_init, lecun_init, rmsnorm,
+                                 rmsnorm_init)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+_C = 8.0  # RG-LRU decay sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _geglu_init(key, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": lecun_init(k1, (d, f)), "w_in": lecun_init(k2, (d, f)),
+            "w_out": lecun_init(k3, (f, d), fan_in=f)}
+
+
+def _geglu(p: dict, x: Array) -> Array:
+    dt = x.dtype
+    return (jax.nn.gelu(x @ p["w_gate"].astype(dt)) * (x @ p["w_in"].astype(dt))
+            ) @ p["w_out"].astype(dt)
+
+
+def _rec_block_init(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": rmsnorm_init(d), "ln2": rmsnorm_init(d),
+        "w_x": lecun_init(ks[0], (d, w)),
+        "w_gate_branch": lecun_init(ks[1], (d, w)),
+        "conv": {"w": lecun_init(ks[2], (cfg.conv_width, w), fan_in=cfg.conv_width),
+                 "b": jnp.zeros((w,), jnp.float32)},
+        "lru": {
+            "alpha": jax.random.uniform(ks[3], (w,), jnp.float32, 0.7, 0.95),
+            "in_gate": {"w": lecun_init(ks[4], (w, w)), "b": jnp.zeros((w,))},
+            "rec_gate": {"w": lecun_init(ks[5], (w, w)), "b": jnp.zeros((w,))},
+        },
+        "lru_out": lecun_init(ks[6], (w, d), fan_in=w),
+        "mlp": _geglu_init(ks[7], d, cfg.d_ff),
+    }
+
+
+def _attn_block_init(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    hq, hkv = cfg.padded_heads(run.tp)
+    ka, km = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(ka, cfg.d_model, hq, hkv,
+                                       cfg.resolved_head_dim),
+            "mlp": _geglu_init(km, cfg.d_model, cfg.d_ff)}
+
+
+def _causal_conv(p: dict, x: Array) -> Array:
+    """Depthwise causal temporal conv, width cw. x: (B,S,W)."""
+    cw = p["w"].shape[0]
+    dt = x.dtype
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["w"][i].astype(dt)
+              for i in range(cw))
+    return out + p["b"].astype(dt)
+
+
+def _lru_coeffs(p: dict, xc: Array) -> tuple[Array, Array]:
+    """a_t and b_t of the diagonal recurrence h_t = a_t h_{t-1} + b_t."""
+    dt32 = jnp.float32
+    x32 = xc.astype(dt32)
+    r = jax.nn.sigmoid(x32 @ p["rec_gate"]["w"] + p["rec_gate"]["b"])
+    i = jax.nn.sigmoid(x32 @ p["in_gate"]["w"] + p["in_gate"]["b"])
+    log_a = -_C * jax.nn.softplus(p["alpha"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * x32)
+    return a, b
+
+
+def _rec_block(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    dt = x.dtype
+    gate = jax.nn.gelu(h @ p["w_gate_branch"].astype(dt))
+    u = h @ p["w_x"].astype(dt)
+    u = _causal_conv(p["conv"], u)
+    a, b = _lru_coeffs(p["lru"], u)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate * hseq.astype(dt)) @ p["lru_out"].astype(dt)
+    x = x + constrain(y, "act_btd")
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + constrain(_geglu(p["mlp"], h), "act_btd")
+
+
+def _attn_block(p: dict, cfg: ModelConfig, run: RunConfig, x: Array,
+                positions: Array) -> Array:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a = attn_mod.full_attention(p["attn"], h, positions=positions,
+                                theta=cfg.rope_theta, causal=True,
+                                window=cfg.window,
+                                use_kernel=run.use_flash_kernel)
+    x = x + constrain(a, "act_btd")
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + constrain(_geglu(p["mlp"], h), "act_btd")
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _n_triples_tail(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.attn_period  # 3: (rec, rec, attn)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    from repro.models.transformer import _stack_init
+    n_triples, n_tail = _n_triples_tail(cfg)
+    ke, ku, kt, kx = jax.random.split(key, 4)
+    params = {"embed": embedding_init(ke, cfg.padded_vocab(run.tp), cfg.d_model),
+              "final_norm": rmsnorm_init(cfg.d_model),
+              "unembed": {"w": lecun_init(ku, (cfg.d_model,
+                                               cfg.padded_vocab(run.tp)))}}
+    params["triples"] = _stack_init(kt, n_triples, lambda k: {
+        "rec1": _rec_block_init(jax.random.fold_in(k, 0), cfg),
+        "rec2": _rec_block_init(jax.random.fold_in(k, 1), cfg),
+        "attn_layer": _attn_block_init(jax.random.fold_in(k, 2), cfg, run),
+    })
+    if n_tail:
+        params["tail"] = _stack_init(kx, n_tail,
+                                     lambda k: _rec_block_init(k, cfg))
+    return params
+
+
+def forward(params: dict, cfg: ModelConfig, run: RunConfig, tokens: Array,
+            vision_embeds=None, return_hidden: bool = False) -> Array:
+    del vision_embeds
+    b, s = tokens.shape
+    dt = jnp.dtype(run.compute_dtype)
+    x = embed(params["embed"], tokens).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, tp):
+        h = _rec_block(tp["rec1"], cfg, carry)
+        h = _rec_block(tp["rec2"], cfg, h)
+        h = _attn_block(tp["attn_layer"], cfg, run, h, positions)
+        return h, ()
+    if run.remat:
+        body = jax.checkpoint(body)
+    x, _ = apply_stack(body, x, params["triples"], unroll=not run.scan_layers)
+    if "tail" in params:
+        def tail_body(carry, tp):
+            return _rec_block(tp, cfg, carry), ()
+        x, _ = apply_stack(tail_body, x, params["tail"],
+                           unroll=not run.scan_layers)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return constrain(x, "act_btd")
+    logits = x @ params["unembed"]["w"].astype(dt)
+    if cfg.padded_vocab(run.tp) != cfg.vocab:
+        logits = logits + jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                                    0.0, -1e30).astype(dt)
+    return constrain(logits, "logits")
+
+
+def train_loss(params, cfg, run, batch) -> Array:
+    if run.ce_chunk:
+        from repro.models.common import chunked_ce_loss
+        x = forward(params, cfg, run, batch["tokens"], return_hidden=True)
+        pv = cfg.padded_vocab(run.tp)
+        return chunked_ce_loss(x, params["unembed"]["w"], batch["labels"],
+                               cfg.vocab, run.ce_chunk,
+                               logit_mask_from=cfg.vocab if pv != cfg.vocab
+                               else 0, unroll=not run.scan_layers)
+    logits = forward(params, cfg, run, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class RecState(NamedTuple):
+    conv_buf: Array    # (B, conv_width-1, lru_width) last inputs
+    h: Array           # (B, lru_width)
+
+
+class DecodeState(NamedTuple):
+    triples: Any       # stacked {rec1, rec2: RecState, attn: KVCache}
+    tail: Any
+    pos: Array
+
+
+def _zero_rec_state(cfg: ModelConfig, batch: int, dt) -> RecState:
+    return RecState(conv_buf=jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dt),
+                    h=jnp.zeros((batch, cfg.lru_width), jnp.float32))
+
+
+def init_decode_state(params, cfg: ModelConfig, run: RunConfig, batch: int,
+                      max_len: int, vision_embeds=None) -> DecodeState:
+    del vision_embeds
+    n_triples, n_tail = _n_triples_tail(cfg)
+    dt = jnp.dtype(run.compute_dtype)
+    hq, hkv = cfg.padded_heads(run.tp)
+    rec = _zero_rec_state(cfg, batch, dt)
+    cache = attn_mod.KVCache.zeros(batch, max_len, hkv, cfg.resolved_head_dim,
+                                   dt, window=cfg.window)
+    triple = {"rec1": rec, "rec2": rec, "attn": cache}
+    triples = jax.tree.map(lambda x: jnp.broadcast_to(
+        x, (n_triples,) + x.shape).copy() if hasattr(x, "shape") else x, triple)
+    tail = jax.tree.map(lambda x: jnp.broadcast_to(
+        x, (n_tail,) + x.shape).copy(), rec) if n_tail else None
+    return DecodeState(triples=triples, tail=tail, pos=jnp.zeros((), jnp.int32))
+
+
+def _rec_decode(p: dict, cfg: ModelConfig, x: Array, st: RecState
+                ) -> tuple[Array, RecState]:
+    """x: (B,1,D)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    dt = x.dtype
+    gate = jax.nn.gelu(h @ p["w_gate_branch"].astype(dt))
+    u = (h @ p["w_x"].astype(dt))[:, 0]                      # (B, W)
+    # conv over [buf, u]
+    hist = jnp.concatenate([st.conv_buf, u[:, None]], axis=1)  # (B, cw, W)
+    cw = p["conv"]["w"].shape[0]
+    uc = sum(hist[:, i] * p["conv"]["w"][i].astype(dt) for i in range(cw)) \
+        + p["conv"]["b"].astype(dt)
+    a, bcoef = _lru_coeffs(p["lru"], uc)
+    hnew = a * st.h + bcoef
+    y = (gate[:, 0] * hnew.astype(dt)) @ p["lru_out"].astype(dt)
+    x = x + y[:, None]
+    z = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + _geglu(p["mlp"], z)
+    return x, RecState(conv_buf=hist[:, 1:], h=hnew)
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, token: Array,
+                state: DecodeState) -> tuple[Array, DecodeState]:
+    dt = jnp.dtype(run.compute_dtype)
+    x = embed(params["embed"], token).astype(dt)
+
+    def body(h, scanned):
+        tp, st = scanned
+        h, s1 = _rec_decode(tp["rec1"], cfg, h, st["rec1"])
+        h, s2 = _rec_decode(tp["rec2"], cfg, h, st["rec2"])
+        z = rmsnorm(tp["attn_layer"]["ln1"], h, cfg.norm_eps)
+        a, c2 = attn_mod.decode_attention(tp["attn_layer"]["attn"], z, st["attn"],
+                                          theta=cfg.rope_theta)
+        h = h + a
+        z = rmsnorm(tp["attn_layer"]["ln2"], h, cfg.norm_eps)
+        h = h + _geglu(tp["attn_layer"]["mlp"], z)
+        return h, {"rec1": s1, "rec2": s2, "attn": c2}
+
+    x, new_triples = apply_stack(body, x, (params["triples"], state.triples),
+                                 unroll=not run.scan_layers)
+    new_tail = state.tail
+    if "tail" in params:
+        def tail_body(h, scanned):
+            tp, st = scanned
+            return _rec_decode(tp, cfg, h, st)
+        x, new_tail = apply_stack(tail_body, x, (params["tail"], state.tail),
+                                  unroll=not run.scan_layers)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]["w"].astype(dt)
+    return logits, DecodeState(triples=new_triples, tail=new_tail,
+                               pos=state.pos + 1)

@@ -1,0 +1,299 @@
+"""Mamba-2 (SSD — state-space duality) blocks, attention-free.
+
+The SSD layer computes  y_s = sum_{t<=s} C_s^T B_t (dt_t x_t) exp(cum_s-cum_t)
+with per-head scalar decay A.  Training/prefill uses the chunked form (paper
+arXiv:2405.21060): quadratic attention-like math inside chunks of length Q,
+plus an O(S/Q) inter-chunk state recurrence — exactly the structure a TPU
+likes (chunk-local matmuls on the MXU + a short scan).  ``ssd_ref`` here is
+the pure-jnp oracle; the Pallas kernel in ``repro.kernels.ssd_scan`` fuses the
+chunk-local part with the state passing (grid iterated sequentially over
+chunks, state carried in VMEM scratch).
+
+Decode is a single state update: h = exp(A dt) h + B (dt x); y = C.h + D x —
+O(1) per token, which is why mamba2 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.common import (apply_stack, cross_entropy_loss, embed,
+                                 embedding_init, lecun_init, rmsnorm,
+                                 rmsnorm_init)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig) -> dict:
+    d_inner = cfg.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return {"d_inner": d_inner, "H": n_heads, "P": cfg.ssm_headdim,
+            "N": cfg.ssm_state, "G": cfg.ssm_ngroups,
+            "conv_ch": d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state}
+
+
+# ---------------------------------------------------------------------------
+# SSD core (reference, chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+            chunk: int, h0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,) [A = -exp(a_log)]
+    b, c: (B,S,G,N) with G groups broadcast over heads.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s_in, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    chunk = min(chunk, s_in)
+    pad = -s_in % chunk
+    if pad:  # dt = 0 padding is an exact no-op (decay exp(0)=1, input x*0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_in + pad
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    dt32 = dt.astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dt32[..., None])          # B x_t dt_t term
+    l = dt32 * a                                             # (B,S,H) log-decay
+    lc = l.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(lc, axis=2)                             # (B,nc,Q,H)
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    bc = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+
+    # intra-chunk (quadratic within chunk)
+    # decay(s,t) = exp(cum_s - cum_t) for t <= s
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcshn,bcthn->bcsth", cc, bc) * decay.transpose(0, 1, 2, 3, 4)
+    y = jnp.einsum("bcsth,bcthp->bcshp", scores, xc)
+
+    # chunk boundary states: sum_t exp(cum_Q - cum_t) B_t xdt_t -> (B,nc,H,P,N)
+    edge = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,Q,H)
+    cstate = jnp.einsum("bcth,bcthn,bcthp->bchpn", edge, bc, xc)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        cs, cd = inp
+        new = carry * cd[:, :, None, None] + cs
+        return new, carry                                     # emit INCOMING state
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    final, h_in = jax.lax.scan(scan_fn,
+                               init,
+                               (cstate.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_s exp(cum_s) h_in
+    y_inter = jnp.einsum("bcsh,bcshn,bchpn->bcshp", jnp.exp(cum), cc, h_in)
+    y = (y + y_inter).reshape(bsz, s, h, p)[:, :s_in]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(h: Array, x: Array, dt: Array, a_log: Array, b: Array,
+                    c: Array) -> tuple[Array, Array]:
+    """One-token update. h: (B,H,P,N); x: (B,H,P); dt: (B,H); b,c: (B,G,N)."""
+    g = b.shape[1]
+    rep = h.shape[1] // g
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=1)       # (B,H,N)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=1)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)               # (B,H)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    h_new = h * decay[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", xdt, bf)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cf)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig) -> dict:
+    dm = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = dm["d_inner"] * 2 + 2 * dm["G"] * dm["N"] + dm["H"]
+    return {"ln": rmsnorm_init(cfg.d_model),
+            "ssd": {
+                "in_proj": lecun_init(ks[0], (cfg.d_model, proj_out)),
+                "conv_w": lecun_init(ks[1], (cfg.conv_width, dm["conv_ch"]),
+                                     fan_in=cfg.conv_width),
+                "conv_b": jnp.zeros((dm["conv_ch"],), jnp.float32),
+                "A_log": jnp.log(jax.random.uniform(ks[2], (dm["H"],),
+                                                    jnp.float32, 1.0, 16.0)),
+                "dt_bias": jnp.log(jnp.expm1(jax.random.uniform(
+                    ks[3], (dm["H"],), jnp.float32, 1e-3, 1e-1))),
+                "D": jnp.ones((dm["H"],), jnp.float32),
+                "norm_scale": jnp.ones((dm["d_inner"],), jnp.float32),
+                "out_proj": lecun_init(ks[4], (dm["d_inner"], cfg.d_model),
+                                       fan_in=dm["d_inner"]),
+            }}
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    dm = _dims(cfg)
+    di, gn, h = dm["d_inner"], dm["G"] * dm["N"], dm["H"]
+    z = proj[..., :di]
+    xin = proj[..., di:2 * di]
+    b = proj[..., 2 * di:2 * di + gn]
+    c = proj[..., 2 * di + gn:2 * di + 2 * gn]
+    dt = proj[..., 2 * di + 2 * gn:]
+    return z, xin, b, c, dt
+
+
+def _block_forward(p: dict, cfg: ModelConfig, run: RunConfig, x: Array,
+                   use_kernel: bool) -> Array:
+    dm = _dims(cfg)
+    dt_ = x.dtype
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = h @ p["ssd"]["in_proj"].astype(dt_)
+    z, xin, b, c, dtp = _split_proj(cfg, proj)
+    # causal conv + silu over [x, B, C]
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    cw = cfg.conv_width
+    padded = jnp.pad(conv_in, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(padded[:, i:i + x.shape[1]] * p["ssd"]["conv_w"][i].astype(dt_)
+               for i in range(cw)) + p["ssd"]["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv)
+    di, gn = dm["d_inner"], dm["G"] * dm["N"]
+    xs = conv[..., :di].reshape(x.shape[0], x.shape[1], dm["H"], dm["P"])
+    bs = conv[..., di:di + gn].reshape(x.shape[0], x.shape[1], dm["G"], dm["N"])
+    cs = conv[..., di + gn:].reshape(x.shape[0], x.shape[1], dm["G"], dm["N"])
+    dt_act = jax.nn.softplus(dtp.astype(jnp.float32) + p["ssd"]["dt_bias"])
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xs, dt_act, p["ssd"]["A_log"], bs, cs,
+                           chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_ref(xs, dt_act, p["ssd"]["A_log"], bs, cs, chunk=cfg.ssm_chunk)
+    y = y + xs * p["ssd"]["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    y = rmsnorm({"scale": p["ssd"]["norm_scale"]}, y * jax.nn.silu(z),
+                cfg.norm_eps)
+    return x + constrain(y @ p["ssd"]["out_proj"].astype(dt_), "act_btd")
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    from repro.models.transformer import _stack_init
+    ke, ku, kl = jax.random.split(key, 3)
+    return {"embed": embedding_init(ke, cfg.padded_vocab(run.tp), cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "unembed": {"w": lecun_init(ku, (cfg.d_model,
+                                             cfg.padded_vocab(run.tp)))},
+            "layers": _stack_init(kl, cfg.n_layers,
+                                  lambda k: _block_init(k, cfg))}
+
+
+def forward(params, cfg: ModelConfig, run: RunConfig, tokens: Array,
+            vision_embeds=None, return_hidden: bool = False) -> Array:
+    del vision_embeds
+    dt = jnp.dtype(run.compute_dtype)
+    x = embed(params["embed"], tokens).astype(dt)
+
+    def body(carry, lp):
+        return _block_forward(lp, cfg, run, carry, run.use_flash_kernel), ()
+    if run.remat:
+        body = jax.checkpoint(body)
+    x, _ = apply_stack(body, x, params["layers"], unroll=not run.scan_layers)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return constrain(x, "act_btd")
+    logits = x @ params["unembed"]["w"].astype(dt)
+    if cfg.padded_vocab(run.tp) != cfg.vocab:
+        logits = logits + jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                                    0.0, -1e30).astype(dt)
+    return constrain(logits, "logits")
+
+
+def train_loss(params, cfg, run, batch) -> Array:
+    if run.ce_chunk:
+        from repro.models.common import chunked_ce_loss
+        x = forward(params, cfg, run, batch["tokens"], return_hidden=True)
+        pv = cfg.padded_vocab(run.tp)
+        return chunked_ce_loss(x, params["unembed"]["w"], batch["labels"],
+                               cfg.vocab, run.ce_chunk,
+                               logit_mask_from=cfg.vocab if pv != cfg.vocab
+                               else 0, unroll=not run.scan_layers)
+    logits = forward(params, cfg, run, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class SsdState(NamedTuple):
+    conv_buf: Array    # (B, cw-1, conv_ch)
+    h: Array           # (B, H, P, N) fp32
+
+
+class DecodeState(NamedTuple):
+    layers: Any
+    pos: Array
+
+
+def init_decode_state(params, cfg: ModelConfig, run: RunConfig, batch: int,
+                      max_len: int, vision_embeds=None) -> DecodeState:
+    del vision_embeds, max_len
+    dm = _dims(cfg)
+    dt = jnp.dtype(run.compute_dtype)
+    st = SsdState(conv_buf=jnp.zeros((batch, cfg.conv_width - 1, dm["conv_ch"]), dt),
+                  h=jnp.zeros((batch, dm["H"], dm["P"], dm["N"]), jnp.float32))
+    layers = jax.tree.map(lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+                          st)
+    return DecodeState(layers=layers, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, token: Array,
+                state: DecodeState) -> tuple[Array, DecodeState]:
+    dm = _dims(cfg)
+    dt = jnp.dtype(run.compute_dtype)
+    x = embed(params["embed"], token).astype(dt)
+
+    def body(h, scanned):
+        lp, st = scanned
+        z0 = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        proj = z0 @ lp["ssd"]["in_proj"].astype(dt)
+        z, xin, b, c, dtp = _split_proj(cfg, proj)
+        conv_in = jnp.concatenate([xin, b, c], axis=-1)[:, 0]   # (B, conv_ch)
+        hist = jnp.concatenate([st.conv_buf, conv_in[:, None]], axis=1)
+        cw = cfg.conv_width
+        conv = sum(hist[:, i] * lp["ssd"]["conv_w"][i].astype(dt)
+                   for i in range(cw)) + lp["ssd"]["conv_b"].astype(dt)
+        conv = jax.nn.silu(conv)
+        di, gn = dm["d_inner"], dm["G"] * dm["N"]
+        xs = conv[:, :di].reshape(-1, dm["H"], dm["P"])
+        bs = conv[:, di:di + gn].reshape(-1, dm["G"], dm["N"])
+        cs = conv[:, di + gn:].reshape(-1, dm["G"], dm["N"])
+        dt_act = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + lp["ssd"]["dt_bias"])
+        y, h_new = ssd_decode_step(st.h, xs, dt_act, lp["ssd"]["A_log"], bs, cs)
+        y = y + xs * lp["ssd"]["D"].astype(dt)[None, :, None]
+        y = y.reshape(-1, 1, di)
+        y = rmsnorm({"scale": lp["ssd"]["norm_scale"]}, y * jax.nn.silu(z),
+                    cfg.norm_eps)
+        out = h + y @ lp["ssd"]["out_proj"].astype(dt)
+        return out, SsdState(conv_buf=hist[:, 1:], h=h_new)
+
+    x, new_layers = apply_stack(body, x, (params["layers"], state.layers),
+                                unroll=not run.scan_layers)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]["w"].astype(dt)
+    return logits, DecodeState(layers=new_layers, pos=state.pos + 1)

@@ -1,0 +1,310 @@
+"""Decoder-only transformer backbone: dense (qwen/deepseek/llama), MoE
+(llama4-scout, granite) and VLM (llama-3.2-vision, cross-attention every Nth
+layer) families.
+
+Layer stacks are *scanned* (`jax.lax.scan` over stacked params), keeping HLO
+size O(1) in depth — essential for 62-layer models compiled for 512-way SPMD.
+For the VLM family the scan unit is a group of ``cross_period`` layers with the
+cross-attention layer at in-group index ``cross_period - 2`` (llama-3.2's
+cross layers sit at 3, 8, 13, ... = groups of 5 with cross at local index 3).
+
+Decode caches are stacked along the same leading layer axis so the decode step
+scans (layer_params, layer_cache) jointly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (apply_stack, cross_entropy_loss, embed,
+                                 embedding_init, lecun_init, rmsnorm,
+                                 rmsnorm_init, swiglu, swiglu_init, unembed,
+                                 unembed_init)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def _stack_init(key, n: int, init_fn) -> Any:
+    """Initialize n layers and stack leaves along a new leading axis."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    hq, hkv = cfg.padded_heads(run.tp)
+    hd = cfg.resolved_head_dim
+    ka, km = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+         "attn": attn_mod.attn_init(ka, cfg.d_model, hq, hkv, hd,
+                                    qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                    shared_expert=cfg.shared_expert)
+    else:
+        p["mlp"] = swiglu_init(km, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _cross_layer_init(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    p = _layer_init(key, cfg, run)
+    p["gate_attn"] = jnp.zeros((), jnp.float32)   # llama-3.2 tanh gates
+    p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def _apply_ffn(p: dict, cfg: ModelConfig, run: RunConfig, h: Array) -> Array:
+    if cfg.family == "moe":
+        return moe_mod.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 dispatch_groups=run.moe_dispatch_groups)
+    return swiglu(p["mlp"], h)
+
+
+def _self_layer(p: dict, cfg: ModelConfig, run: RunConfig, x: Array,
+                positions: Array, window: int = 0) -> Array:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a = attn_mod.full_attention(p["attn"], h, positions=positions,
+                                theta=cfg.rope_theta, causal=True,
+                                window=window, use_kernel=run.use_flash_kernel)
+    x = x + constrain(a, "act_btd")
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + constrain(_apply_ffn(p, cfg, run, h), "act_btd")
+    return x
+
+
+def _cross_layer(p: dict, cfg: ModelConfig, run: RunConfig, x: Array,
+                 vision: Array) -> Array:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    dummy_pos = jnp.zeros((x.shape[0], x.shape[1]), jnp.int32)
+    a = attn_mod.full_attention(p["attn"], h, positions=dummy_pos,
+                                theta=cfg.rope_theta, x_kv=vision)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * constrain(a, "act_btd")
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * \
+        constrain(_apply_ffn(p, cfg, run, h), "act_btd")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, run: RunConfig) -> dict:
+    ke, ku, kl, kx = jax.random.split(key, 4)
+    vocab = cfg.padded_vocab(run.tp)
+    params = {"embed": embedding_init(ke, vocab, cfg.d_model),
+              "final_norm": rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = unembed_init(ku, cfg.d_model, vocab)
+    if cfg.family == "vlm":
+        period = cfg.cross_period
+        n_groups = cfg.n_layers // period
+        params["groups"] = _stack_init(kl, n_groups, lambda k: {
+            "selfs": _stack_init(k, period - 1,
+                                 lambda kk: _layer_init(kk, cfg, run)),
+            "cross": _cross_layer_init(jax.random.fold_in(k, 7), cfg, run),
+        })
+        params["vision_proj"] = {"w": lecun_init(kx, (cfg.d_model, cfg.d_model))}
+    else:
+        params["layers"] = _stack_init(kl, cfg.n_layers,
+                                       lambda k: _layer_init(k, cfg, run))
+    return params
+
+
+def cast_params(params, dtype) -> dict:
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if isinstance(x, jax.Array) and
+                        jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, run: RunConfig, tokens: Array,
+            vision_embeds: Optional[Array] = None,
+            return_hidden: bool = False) -> Array:
+    """tokens (B, S) -> logits (B, S, padded_vocab); with ``return_hidden``
+    the final normed hidden states (B, S, D) instead (chunked-CE path)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens).astype(_dt(run))
+    x = constrain(x, "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "vlm":
+        vision = (vision_embeds.astype(_dt(run)) @
+                  params["vision_proj"]["w"].astype(_dt(run)))
+
+        def group_body(carry, gp):
+            h = carry
+
+            def self_body(hh, lp):
+                out = _self_layer(lp, cfg, run, hh, positions)
+                return out, ()
+            if run.remat:
+                self_body = jax.checkpoint(self_body)
+            h, _ = apply_stack(self_body, h, gp["selfs"],
+                               unroll=not run.scan_layers)
+            h = _cross_layer(gp["cross"], cfg, run, h, vision)
+            return h, ()
+
+        x, _ = apply_stack(group_body, x, params["groups"],
+                           unroll=not run.scan_layers)
+    else:
+        def body(carry, lp):
+            return _self_layer(lp, cfg, run, carry, positions), ()
+        if run.remat:
+            body = jax.checkpoint(body)
+        x, _ = apply_stack(body, x, params["layers"],
+                           unroll=not run.scan_layers)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return constrain(x, "act_btd")
+    logits = _lm_head(params, cfg, run, x)
+    return constrain(logits, "logits")
+
+
+def _lm_head(params: dict, cfg: ModelConfig, run: RunConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w"].astype(x.dtype).T
+    else:
+        logits = unembed(params["unembed"], x)
+    pv = cfg.padded_vocab(run.tp)
+    if pv != cfg.vocab:
+        # physical vocab padding (DESIGN.md §5): dead columns masked to -inf
+        mask = jnp.where(jnp.arange(pv) < cfg.vocab, 0.0, -1e30)
+        logits = logits + mask.astype(logits.dtype)
+    return logits
+
+
+def train_loss(params: dict, cfg: ModelConfig, run: RunConfig, batch: dict) -> Array:
+    if run.ce_chunk:
+        from repro.models.common import chunked_ce_loss
+        x = forward(params, cfg, run, batch["tokens"],
+                    vision_embeds=batch.get("vision_embeds"),
+                    return_hidden=True)
+        w = (params["embed"]["w"].T if cfg.tie_embeddings
+             else params["unembed"]["w"])
+        pv = cfg.padded_vocab(run.tp)
+        return chunked_ce_loss(x, w, batch["labels"], cfg.vocab,
+                               run.ce_chunk,
+                               logit_mask_from=cfg.vocab if pv != cfg.vocab
+                               else 0,
+                               unroll=not run.scan_layers)
+    logits = forward(params, cfg, run, batch["tokens"],
+                     vision_embeds=batch.get("vision_embeds"))
+    return cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+
+
+def _dt(run: RunConfig):
+    return jnp.dtype(run.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any            # stacked KVCache (leading layer/group axis)
+    vision_kv: Any         # vlm only: stacked cross K/V per group
+    pos: Array
+
+
+def init_decode_state(params: dict, cfg: ModelConfig, run: RunConfig,
+                      batch: int, max_len: int,
+                      vision_embeds: Optional[Array] = None) -> DecodeState:
+    hq, hkv = cfg.padded_heads(run.tp)
+    hd = cfg.resolved_head_dim
+    dt = _dt(run)
+
+    proto = attn_mod.KVCache.zeros(batch, max_len, hkv, hd, dt, window=0)
+
+    if cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_period
+        caches = {"selfs": jax.tree.map(
+            lambda x: jnp.zeros((n_groups, cfg.cross_period - 1) + x.shape,
+                                x.dtype), proto)}
+        vision = (vision_embeds.astype(dt) @ params["vision_proj"]["w"].astype(dt))
+
+        def cross_kv(gp):
+            _, k, v = attn_mod._project_qkv(gp["cross"]["attn"], vision, vision,
+                                            jnp.zeros(vision.shape[:2], jnp.int32),
+                                            cfg.rope_theta, rope=False)
+            return k, v
+        vision_kv = jax.vmap(cross_kv)(params["groups"])
+        return DecodeState(caches=caches, vision_kv=vision_kv,
+                           pos=jnp.zeros((), jnp.int32))
+
+    caches = jax.tree.map(lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+                          proto)
+    return DecodeState(caches=caches, vision_kv=None, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, run: RunConfig, token: Array,
+                state: DecodeState) -> tuple[Array, DecodeState]:
+    """token (B, 1) int32 -> (logits (B, 1, V), new state)."""
+    x = embed(params["embed"], token).astype(_dt(run))
+
+    def self_decode(p, c, h):
+        z = rmsnorm(p["ln1"], h, cfg.norm_eps)
+        a, c2 = attn_mod.decode_attention(p["attn"], z, c, theta=cfg.rope_theta)
+        h = h + a
+        z = rmsnorm(p["ln2"], h, cfg.norm_eps)
+        return h + _apply_ffn(p, cfg, run, z), c2
+
+    if cfg.family == "vlm":
+        def group_body(h, scanned):
+            gp, gc, vkv = scanned
+
+            def inner(hh, lp_c):
+                out, c2 = self_decode(lp_c[0], lp_c[1], hh)
+                return out, c2
+            h, new_self = apply_stack(inner, h, (gp["selfs"], gc),
+                                      unroll=not run.scan_layers)
+            # cross layer (cache-free)
+            p = gp["cross"]
+            z = rmsnorm(p["ln1"], h, cfg.norm_eps)
+            a, _ = attn_mod.decode_attention(p["attn"], z, _dummy_cache(h, cfg, run),
+                                             theta=cfg.rope_theta, kv_cross=vkv)
+            h = h + jnp.tanh(p["gate_attn"]).astype(h.dtype) * a
+            z = rmsnorm(p["ln2"], h, cfg.norm_eps)
+            h = h + jnp.tanh(p["gate_mlp"]).astype(h.dtype) * \
+                _apply_ffn(p, cfg, run, z)
+            return h, new_self
+
+        x, new_selfs = apply_stack(group_body, x,
+                                   (params["groups"], state.caches["selfs"],
+                                    state.vision_kv),
+                                   unroll=not run.scan_layers)
+        new_caches = {"selfs": new_selfs}
+    else:
+        def body(h, scanned):
+            lp, c = scanned
+            out, c2 = self_decode(lp, c, h)
+            return out, c2
+        x, new_caches = apply_stack(body, x, (params["layers"], state.caches),
+                                    unroll=not run.scan_layers)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, run, x)
+    return logits, DecodeState(caches=new_caches, vision_kv=state.vision_kv,
+                               pos=state.pos + 1)
+
+
+def _dummy_cache(x: Array, cfg: ModelConfig, run: RunConfig):
+    hq, hkv = cfg.padded_heads(run.tp)
+    return attn_mod.KVCache.zeros(x.shape[0], 1, hkv, cfg.resolved_head_dim,
+                                  x.dtype)

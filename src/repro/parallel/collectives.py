@@ -1,0 +1,79 @@
+"""Collective accounting: parse lowered/compiled HLO text and sum the operand
+bytes of every communication op — the ``collective term`` input of the
+roofline analysis (cost_analysis() does not expose collective bytes).
+
+Also provides the distributed-PCA covariance reduction used by GAE at scale
+(DESIGN.md §4.5): a D x D psum, communication independent of dataset size.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# e.g.  f32[256,1024]{1,0} or bf16[8,128] (layout braces optional)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape-or-tuple> op-name(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind across an HLO module.
+
+    Uses each op's RESULT shape (for all-reduce in == out; for all-gather the
+    result is the global view = bytes that transited links under a ring; a
+    standard, conservative convention for roofline purposes).  ``-done`` ops
+    are skipped so async pairs are not double-counted.
+    """
+    out: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# distributed PCA covariance (GAE at scale)
+# ---------------------------------------------------------------------------
+
+def distributed_covariance(local_residuals: jax.Array,
+                           axis_name: Optional[str] = None) -> jax.Array:
+    """C = sum_i r_i r_i^T, psum'd over the data axis: O(D^2) communication,
+    independent of the number of residual blocks."""
+    r = local_residuals.astype(jnp.float32)
+    cov = r.T @ r
+    if axis_name is not None:
+        cov = jax.lax.psum(cov, axis_name)
+    return cov

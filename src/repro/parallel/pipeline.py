@@ -1,0 +1,82 @@
+"""GPipe-style pipeline parallelism via shard_map + lax.ppermute.
+
+An alternative layout for the pod axis (DESIGN.md §6): instead of extending
+data parallelism across pods, the layer stack is split into P stages, one per
+pipe-axis slice; microbatches stream through the stages with activations
+forwarded by ``lax.ppermute`` (the jax-native point-to-point — no NCCL-style
+send/recv emulation).
+
+The schedule is plain GPipe: M microbatches, M + P - 1 ticks, bubble fraction
+(P-1)/(M+P-1).  Every device executes identical code; stage-0 injection,
+last-stage collection, and the bubble are expressed as masked selects, so the
+whole schedule jits to a single fori_loop — no per-tick retracing.
+
+``pipeline_apply`` is intentionally generic: ``stage_fn(stage_params, x)``
+is one pipeline stage (usually a scan over that stage's layer slice).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+Array = jax.Array
+
+
+def pipeline_apply(stage_fn: Callable, stage_params: PyTree, x: Array, *,
+                   mesh: Mesh, axis: str = "pipe") -> Array:
+    """Run x through P sequential stages with a GPipe schedule.
+
+    stage_params: pytree with leading axis P (stage-major), sharded over
+    ``axis``.  x: (M, mb, ...) microbatched input, replicated.  Returns
+    (M, mb, ...) outputs (gathered from the last stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+
+    def per_device(params, xs):
+        # params: (1, ...) this stage's slice;  xs: (M, mb, ...) replicated
+        stage = jax.lax.axis_index(axis)
+        my_params = jax.tree.map(lambda p: p[0], params)
+        buf = jnp.zeros_like(xs[0])
+        out = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, out = carry
+            # stage-0 injection of microbatch t (clamped gather; masked)
+            inj = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False)
+            use_inj = jnp.logical_and(stage == 0, t < n_micro)
+            buf = jnp.where(use_inj, inj, buf)
+            y = stage_fn(my_params, buf)
+            # last-stage collection of finished microbatch t - (P-1)
+            slot = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            collect = jnp.logical_and(stage == n_stages - 1,
+                                      t >= n_stages - 1)
+            cur = jax.lax.dynamic_index_in_dim(out, slot, 0, keepdims=False)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where(collect, y, cur), slot, 0)
+            # forward activations to the next stage (ring; wrap discarded)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, out
+
+        _, out = jax.lax.fori_loop(0, n_micro + n_stages - 1, tick, (buf, out))
+        # every device returns its `out`; only the last stage's is real.
+        # psum-mask so the replicated output is the last stage's tensor.
+        mask = (stage == n_stages - 1).astype(out.dtype)
+        return jax.lax.psum(out * mask, axis)
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(per_device, mesh=mesh,
+                       in_specs=(spec_params, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, x)
+
+
+def gpipe_bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,255 @@
+"""Partition rules: parameter PartitionSpecs + activation sharding constraints.
+
+Mesh axes (launch/mesh.py): ("data", "model") single-pod, ("pod", "data",
+"model") multi-pod.  Batch shards over ("pod","data") [DP], weights over
+"model" [TP/EP]; see DESIGN.md §6.
+
+Activation constraints are applied through ``constrain(x, kind)``, which is a
+no-op unless a launcher has installed rules via ``activation_sharding(...)`` —
+so single-device smoke tests trace the very same model code with zero sharding
+machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[dict] = None
+
+
+def activation_rules(multi_pod: bool, sp: bool = False,
+                     kv_seq_shard: bool = False) -> dict:
+    """``sp=True`` = Megatron-style sequence parallelism: residual-stream
+    activations between attention/MLP blocks are sharded over the model axis
+    along the SEQUENCE dim, so GSPMD lowers the TP boundary as
+    reduce-scatter + all-gather (half the bytes of the all-reduce it replaces,
+    and overlappable) — a §Perf hillclimb lever."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "tokens": P(dp, None),                 # (B, S)
+        "act_btd": P(dp, "model", None) if sp  # (B, S, D)
+        else P(dp, None, None),
+        "act_btf": P(dp, None, "model"),       # (B, S, F) — ffn hidden sharded
+        "act_bthd": P(dp, None, "model", None),  # (B, S, H, hd) — heads sharded
+        "logits": P(dp, None, "model"),        # (B, S, V) — vocab sharded
+        # (B, S, KV, hd); long-context decode at batch < dp shards the
+        # sequence axis instead (sequence parallelism, DESIGN.md §6)
+        "kv_cache": P(None, dp, "model", None) if kv_seq_shard
+        else P(dp, None, "model", None),
+        "expert_buf": P("model", None, None),  # (E, C, D)
+        # flattened (B*S, D) token table in the MoE dispatch/combine: the
+        # (b,s,d)->(t,d) reshape breaks GSPMD's propagated sharding (b on dp,
+        # s on model under SP are not jointly expressible on t), which
+        # otherwise replicates 1M-token fp32 buffers (§Perf llama4 it3)
+        "tokens_flat": P(dp, None),
+        "tokens_grouped": P(dp, None, None),   # (G, T/G, D) grouped dispatch
+    }
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Optional[dict]):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, rules
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    if _ACTIVE is None or kind not in _ACTIVE:
+        return x
+    spec = _ACTIVE[kind]
+    if x.ndim != len(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter partition rules
+# ---------------------------------------------------------------------------
+
+# (regex over the param path, spec WITHOUT the scan-stack leading axis)
+_PARAM_RULES: list[tuple[str, P]] = [
+    (r"embed/w$",            P("model", None)),          # (V, D) vocab-sharded
+    (r"unembed/w$",          P(None, "model")),          # (D, V)
+    (r"pos_embed/w$",        P(None, None)),
+    (r"(wq|wk|wv)$",         P(None, "model", None)),    # (D, H, hd) head-sharded
+    (r"wo$",                 P("model", None, None)),    # (H, hd, D)
+    (r"(bq|bk|bv)$",         P("model", None)),
+    # MoE rules MUST precede the generic ffn rules (longest-match-first).
+    (r"moe/router$",         P(None, None)),
+    (r"moe/shared/(w_gate|w_in)$", P(None, "model")),    # shared expert (D, F)
+    (r"moe/shared/w_out$",   P("model", None)),
+    (r"moe/(w_gate|w_in)$",  P("model", None, None)),    # (E, D, F) EP
+    (r"moe/w_out$",          P("model", None, None)),    # (E, F, D) EP
+    (r"moe_fs/(w_gate|w_in)$", P(None, None, "model")),  # E % tp != 0: shard F
+    (r"moe_fs/w_out$",       P(None, "model", None)),
+    (r"(w_gate|w_in)$",      P(None, "model")),          # (D, F)
+    (r"w_out$",              P("model", None)),          # (F, D)
+    (r"(w_x|w_gate_branch)$", P(None, "model")),         # RG-LRU (D, lru)
+    (r"(conv/w|conv/b)$",    P(None, "model")),          # (cw, lru)
+    (r"lru/(alpha|in_gate/w|rec_gate/w)$", P(None, "model")),
+    (r"lru/(in_gate|rec_gate)/b$", P("model",)),
+    (r"lru_out$",            P("model", None)),          # (lru, D)
+    (r"ssd/in_proj$",        P(None, "model")),          # (D, d_inner+...)
+    (r"ssd/out_proj$",       P("model", None)),          # (d_inner, D)
+    (r"ssd/conv_w$",         P(None, "model")),
+    (r"ssd/(A_log|dt_bias|D|norm_scale)$", P("model",)),
+    (r"(scale|bias|b_in|b_out|gate)$", None),            # norms / biases: replicated
+]
+
+
+def param_spec_for_path(path: str, ndim: int, *, scanned: int = 0) -> P:
+    """Match a parameter path to its PartitionSpec; prepend one unsharded axis
+    per stacked-layer level (``scanned`` — the VLM has nested groups/selfs
+    stacks = 2); fall back to replication."""
+    for pattern, spec in _PARAM_RULES:
+        if re.search(pattern, path):
+            if spec is None:
+                spec = P()
+            parts = list(spec)
+            break
+    else:
+        parts = []
+    parts = [None] * scanned + parts
+    # pad/truncate to ndim
+    parts = parts[:ndim] + [None] * (ndim - len(parts))
+    return P(*parts)
+
+
+def _path_str(path) -> str:
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            out.append(str(entry.idx))
+        else:
+            out.append(str(entry))
+    return "/".join(out)
+
+
+def param_partition_specs(params, scanned_prefixes: tuple[str, ...] = (
+        "layers", "triples", "groups", "selfs", "enc_layers", "dec_layers",
+        "tail"),
+        *, fsdp_axis: Optional[str] = None, fsdp_size: int = 0,
+        min_fsdp_elems: int = 65536, tp_size: int = 0) -> dict:
+    """PartitionSpec pytree matching ``params``.
+
+    Leaves under any of ``scanned_prefixes`` carry a leading stacked-layer axis
+    that is never sharded.
+
+    ``fsdp_axis`` (ZeRO-3 / MaxText-style fully-sharded params): additionally
+    shard the first unsharded *feature* dim divisible by ``fsdp_size`` on every
+    leaf with >= ``min_fsdp_elems`` elements.  GSPMD then all-gathers each
+    layer's params at use and reduce-scatters gradients — parameter and
+    optimizer memory drop by the data-axis size.  The stacked-layer (scan)
+    axis is never chosen.
+    """
+    def spec(path, leaf):
+        p = _path_str(path)
+        n_stack = sum(seg in scanned_prefixes for seg in p.split("/"))
+        base = param_spec_for_path(p, jnp.ndim(leaf), scanned=n_stack)
+        shape = getattr(leaf, "shape", ())
+        parts = list(base)
+        # MoE divisibility fallback (DESIGN.md §6): when the expert count
+        # does not divide the model axis (granite: 40 % 16 != 0), shard the
+        # per-expert ffn dim instead of the expert axis.
+        if tp_size > 1 and re.search(r"moe/w_(gate|in|out)$", p):
+            e_dim = n_stack
+            if shape[e_dim] % tp_size != 0:
+                parts[e_dim] = None
+                f_dim = len(parts) - (2 if p.endswith("w_out") else 1)
+                parts[f_dim] = "model"
+        size = 1
+        for d in shape:
+            size *= d
+        if (fsdp_axis and fsdp_size > 1 and size >= min_fsdp_elems
+                and len(shape) >= 2):
+            for i in range(n_stack, len(parts)):
+                if parts[i] is None and shape[i] % fsdp_size == 0:
+                    parts[i] = fsdp_axis
+                    break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def named_shardings(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_spec(multi_pod: bool) -> P:
+    return P(("pod", "data") if multi_pod else ("data",), None)
+
+
+# ---------------------------------------------------------------------------
+# decode-state partition rules (serve_step dry-run cells)
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(state_shapes, multi_pod: bool, *,
+                       batch: int, dp_size: int, seq_len: int = 0,
+                       tp_size: int = 16):
+    """PartitionSpec pytree for a model's DecodeState (shapes from
+    eval_shape).
+
+    Rules are SHAPE-driven, not name-driven: custom pytree nodes (KVCache is
+    a registered NamedTuple) flatten positionally, so leaf names are not
+    visible in key paths.  Classification:
+
+      * a leaf with an axis == ``seq_len``  -> KV-style cache
+        (..., B, S, KV, hd): dp on the batch axis, "model" on the KV-head
+        axis (padded to divide tp), hd replicated;
+      * any other leaf with an axis == ``batch`` -> per-batch recurrent state
+        (SSD h, conv ring buffers, RG-LRU h, encoder cross-KV): dp on the
+        batch axis, "model" on the first later axis divisible by tp;
+      * everything else (positions, scalars) -> replicated.
+
+    When ``batch < dp_size`` (long_500k: batch 1) the data axis cannot shard
+    batch; KV caches shard the sequence axis over it instead (sequence
+    parallelism, DESIGN.md §6) and other per-batch state is replicated.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    seq_shard = batch < dp_size
+
+    def spec(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        parts: list = [None] * ndim
+        s_idx = next((i for i, d in enumerate(shape)
+                      if seq_len and d == seq_len), None)
+        b_idx = next((i for i, d in enumerate(shape) if d == batch), None)
+        if s_idx is not None and ndim >= 3:
+            # KV cache (..., B, S, KV, hd)
+            kv_idx = s_idx + 1 if s_idx + 1 < ndim else None
+            if seq_shard:
+                parts[s_idx] = dp
+            elif b_idx is not None and b_idx < s_idx:
+                parts[b_idx] = dp
+            if kv_idx is not None and shape[kv_idx] % tp_size == 0:
+                parts[kv_idx] = "model"
+            return P(*parts)
+        if b_idx is not None and ndim >= 2:
+            if not seq_shard:
+                parts[b_idx] = dp
+            for i in range(b_idx + 1, ndim):
+                if shape[i] % tp_size == 0:
+                    parts[i] = "model"
+                    break
+            return P(*parts)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, state_shapes)

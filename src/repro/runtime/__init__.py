@@ -1,0 +1,3 @@
+"""Production runtime: checkpoint/restart, failure handling, and the paper's
+compression technique applied where a 1000-node deployment bleeds bytes —
+gradient all-reduce, KV cache, and checkpoint storage (DESIGN.md §2)."""

@@ -1,0 +1,131 @@
+"""Paged KV-cache with error-bounded compression of frozen pages
+(DESIGN.md §2): the paper's hyper-block + PCA-GAE machinery applied to the
+serving-time KV cache.
+
+A page is 16 consecutive tokens of one layer's K (or V) tensor — shape
+(page, KV, hd), flattened to a vector.  Pages still inside the active tail
+window stay uncompressed (they are being appended / are attention-hot); pages
+older than the window are *frozen* and compressed:
+
+  * all frozen pages of a layer form the "dataset"; a PCA basis over the page
+    vectors is fit once per compression epoch (cheap: D = page*KV*hd per-group
+    covariance, the same distributed-PCA trick as GAE);
+  * each page keeps the minimal number of quantized leading coefficients such
+    that ||page - page^G||_2 <= tau — a *guaranteed* bound on the KV
+    perturbation entering attention;
+  * coefficients are quantized ints + index sets, so the archive cost is the
+    honest storage cost (Huffman/bitmask accounting available host-side).
+
+``CompressedKVStore`` is the host-side container used by ``serve.engine``;
+``compress_pages`` / ``decompress_pages`` are the jit-friendly batch paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import entropy, gae
+
+Array = jax.Array
+
+PAGE_TOKENS = 16
+
+
+def paginate(kv: np.ndarray, page: int = PAGE_TOKENS) -> np.ndarray:
+    """(B, S, KV, hd) -> (B, n_pages, page*KV*hd); S must divide into pages."""
+    b, s, kvh, hd = kv.shape
+    assert s % page == 0, (s, page)
+    return kv.reshape(b, s // page, page * kvh * hd)
+
+
+def unpaginate(pages: np.ndarray, kvh: int, hd: int,
+               page: int = PAGE_TOKENS) -> np.ndarray:
+    b, np_, d = pages.shape
+    assert d == page * kvh * hd
+    return pages.reshape(b, np_ * page, kvh, hd)
+
+
+@dataclasses.dataclass
+class CompressedKVStore:
+    """Frozen-page archive for one layer's K or V stream."""
+    basis: np.ndarray                 # (D, D)
+    codes: list[gae.GAEBlockCode]
+    n_pages: int
+    page_shape: tuple                 # (page, KV, hd)
+    tau: float
+    bin_size: float
+    dtype: np.dtype
+
+    def nbytes(self) -> int:
+        """Honest archive cost: quantized coefficients (Huffman) + index
+        bitmasks + per-page bin exponents.  The basis is amortized across the
+        whole serving session (all pages, all requests) like the paper
+        amortizes model cost."""
+        coeffs = np.concatenate([c.qcoeffs for c in self.codes]) \
+            if self.codes else np.zeros(0, np.int64)
+        total = entropy.huffman_size_bits(coeffs) // 8 if coeffs.size else 0
+        total += len(entropy.encode_index_sets(
+            [np.sort(c.indices) for c in self.codes], self.basis.shape[0]))
+        total += len(self.codes)  # bin_exp bytes
+        return total
+
+    def raw_nbytes(self) -> int:
+        d = int(np.prod(self.page_shape))
+        return self.n_pages * d * self.dtype.itemsize
+
+
+def compress_pages(pages: np.ndarray, *, tau: float, bin_size: float = 1e-3,
+                   basis: Optional[np.ndarray] = None,
+                   page_shape: tuple = (PAGE_TOKENS, 1, 64)
+                   ) -> tuple[np.ndarray, CompressedKVStore]:
+    """pages: (N, D) flattened frozen pages.  Returns (reconstruction with the
+    per-page guarantee, archive)."""
+    pages = np.asarray(pages, np.float32)
+    if basis is None:
+        basis = np.asarray(gae.fit_pca_basis(jnp.asarray(pages)))
+    zeros = np.zeros_like(pages)
+    recon, codes = gae.gae_encode_blocks(pages, zeros, basis, tau, bin_size)
+    store = CompressedKVStore(basis=basis, codes=codes, n_pages=pages.shape[0],
+                              page_shape=page_shape, tau=tau,
+                              bin_size=bin_size, dtype=np.dtype(np.float32))
+    return recon, store
+
+
+def decompress_pages(store: CompressedKVStore) -> np.ndarray:
+    d = store.basis.shape[0]
+    zeros = np.zeros((store.n_pages, d), np.float32)
+    return gae.gae_decode_blocks(zeros, store.basis, store.codes,
+                                 store.bin_size)
+
+
+# ---------------------------------------------------------------------------
+# attention-error propagation bound
+# ---------------------------------------------------------------------------
+
+def attention_perturbation_bound(tau: float, page_elems: int,
+                                 n_pages: int) -> float:
+    """Worst-case l2 perturbation of the attention *input* (the concatenated
+    KV) given per-page ||dK||_2 <= tau: sqrt(n_pages) * tau (pages are
+    disjoint coordinates).  Normalized per element: tau / sqrt(page_elems)."""
+    return float(np.sqrt(n_pages) * tau)
+
+
+# ---------------------------------------------------------------------------
+# jit-friendly bounded quantization path (in-graph, for decode-loop use)
+# ---------------------------------------------------------------------------
+
+def quantize_kv_bounded(kv: Array, tau_per_token: float) -> tuple[Array, dict]:
+    """In-graph uniform KV quantization with a per-token l2 guarantee:
+    bin = 2 * tau / sqrt(KV*hd) makes the worst-case per-token quantization
+    error exactly tau (quantization_error_bound).  Used on the decode hot
+    path where host-side PCA would stall the step."""
+    from repro.core.quantization import quantize_dequantize
+    d = kv.shape[-1] * kv.shape[-2]
+    bin_size = 2.0 * tau_per_token / float(np.sqrt(d))
+    out = quantize_dequantize(kv, bin_size)
+    return out, {"bin_size": bin_size, "bits_estimate":
+                 jnp.log2(jnp.maximum(jnp.max(jnp.abs(kv)) / bin_size, 1.0)) + 1}

@@ -1,0 +1,159 @@
+"""Batched serving engine: prefill + decode with continuous batching and an
+error-bounded compressed-KV option (the paper's technique at serving time).
+
+The engine drives any registered arch through its ``decode_step`` — the same
+function the decode_32k / long_500k dry-run cells lower — so what is served
+here is exactly what is proven to compile on the production meshes.
+
+Features:
+  * batched prefill (scan over prompt tokens, one jitted step);
+  * greedy / temperature sampling, per-slot stop lengths;
+  * **continuous batching**: a slot queue; finished slots are refilled from
+    the pending-request queue without stopping the batch (the vLLM-style
+    serving loop, minus paged attention which lives in runtime/kvcache);
+  * **compressed KV** (``kv_tau``): after prefill, each slot's KV cache is
+    passed through the bounded quantizer (runtime.kvcache) with a per-token
+    l2 guarantee — decode then attends the compressed cache, trading bounded
+    KV distortion for HBM footprint exactly as DESIGN.md §2 prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models.registry import get_model
+from repro.runtime.kvcache import quantize_kv_bounded
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int
+    # modality frontend payloads (stubs per assignment): whisper requests
+    # carry precomputed frame embeddings, VLM requests patch embeddings
+    frontend: Optional[dict] = None   # e.g. {"frames": (n_frames, d)}
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray             # generated ids
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, params: Any, *,
+                 batch_size: int, max_len: int, temperature: float = 0.0,
+                 kv_tau: Optional[float] = None, seed: int = 0):
+        self.cfg, self.run, self.params = cfg, run, params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.kv_tau = kv_tau
+        self.api = get_model(cfg)
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, s: self.api.decode_step(p, cfg, run, t, s))
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- prefill: scan decode_step over the prompt -------------------------
+    def _prefill_impl(self, params, tokens: Array, state):
+        def body(st, tok):
+            logits, st = self.api.decode_step(params, self.cfg, self.run,
+                                              tok[:, None], st)
+            return st, logits[:, 0]
+        state, logits = jax.lax.scan(body, state, tokens.T)
+        return state, logits[-1]                      # last-position logits
+
+    def _compress_kv(self, state):
+        """Bounded in-graph KV compression of every KVCache leaf."""
+        def visit(node):
+            if isinstance(node, attn_mod.KVCache):
+                k, _ = quantize_kv_bounded(node.k, self.kv_tau)
+                v, _ = quantize_kv_bounded(node.v, self.kv_tau)
+                return attn_mod.KVCache(k=k, v=v, pos=node.pos,
+                                        window=node.window)
+            return node
+        return jax.tree.map(visit, state,
+                            is_leaf=lambda n: isinstance(n, attn_mod.KVCache))
+
+    def _sample(self, logits: Array) -> Array:
+        logits = logits[..., :self.cfg.vocab]
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1) \
+            .astype(jnp.int32)
+
+    # -- batch generation ----------------------------------------------------
+    def generate_batch(self, prompts: np.ndarray, max_new: int,
+                       frontend: Optional[dict] = None) -> np.ndarray:
+        """Same-length batched generation. prompts: (B, S) -> (B, max_new).
+        ``frontend``: batched modality payloads, e.g. {"frames": (B, F, D)}."""
+        b, s = prompts.shape
+        state = self.api.init_decode_state(
+            self.params, self.cfg, self.run, b, self.max_len,
+            **{k: jnp.asarray(v) for k, v in (frontend or {}).items()})
+        state, logits = self._prefill(self.params, jnp.asarray(prompts), state)
+        if self.kv_tau is not None:
+            state = self._compress_kv(state)
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits)
+        for t in range(max_new):
+            out[:, t] = np.asarray(tok)
+            logits, state = self._decode(self.params, tok[:, None], state)
+            tok = self._sample(logits[:, 0])
+        return out
+
+    # -- continuous batching over a request queue -----------------------------
+    def serve(self, requests: list[Request]) -> list[Completion]:
+        """Continuous batching: fixed slot count, finished slots refilled.
+        Prompts are left-truncated to the engine max_len budget."""
+        pending = list(reversed(requests))          # pop() = FIFO
+        slots: list[Optional[dict]] = [None] * self.batch
+        done: list[Completion] = []
+
+        def admit(i: int) -> None:
+            if not pending:
+                slots[i] = None
+                return
+            req = pending.pop()
+            prompt = req.prompt[-self.max_len // 2:]
+            state = self.api.init_decode_state(
+                self.params, self.cfg, self.run, 1, self.max_len,
+                **{k: jnp.asarray(v)[None] for k, v in
+                   (req.frontend or {}).items()})
+            state, logits = self._prefill(
+                self.params, jnp.asarray(prompt[None, :]), state)
+            if self.kv_tau is not None:
+                state = self._compress_kv(state)
+            slots[i] = {"req": req, "state": state, "out": [],
+                        "tok": self._sample(logits)}
+
+        for i in range(self.batch):
+            admit(i)
+        while any(s is not None for s in slots):
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                s["out"].append(int(np.asarray(s["tok"])[0]))
+                if len(s["out"]) >= s["req"].max_new_tokens:
+                    done.append(Completion(
+                        rid=s["req"].rid,
+                        tokens=np.asarray(s["out"], np.int32),
+                        prompt_len=len(s["req"].prompt)))
+                    admit(i)
+                    continue
+                logits, s["state"] = self._decode(
+                    self.params, s["tok"][:, None], s["state"])
+                s["tok"] = self._sample(logits[:, 0])
+        return sorted(done, key=lambda c: c.rid)

@@ -1,0 +1,164 @@
+"""Optimizers and LR schedules (pure-JAX pytree implementation).
+
+Shared by the compressor training loops (``repro.core.training``) and the LM
+trainer (``repro.train.loop``).  The interface mirrors optax's
+``init/update`` pair but is self-contained (optax is not available offline).
+
+All state is a pytree shaped like the params, so it shards identically to the
+params under GSPMD (ZeRO-style optimizer-state sharding comes for free when the
+update step is jitted with sharded in/out shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                           final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    warmup_steps = max(warmup_steps, 1)
+
+    def sched(step: jax.Array) -> jax.Array:
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def linear_decay_schedule(peak_lr: float, total_steps: int) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return peak_lr * (1.0 - t)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params) -> (new_params, state, stats)."""
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], tuple[PyTree, Any, dict]]
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, max_grad_norm: Optional[float] = None,
+          mu_dtype=jnp.float32) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params: PyTree) -> AdamState:
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=tree_zeros_like(params, mu_dtype),
+                         nu=tree_zeros_like(params, jnp.float32))
+
+    def update(grads: PyTree, state: AdamState, params: PyTree):
+        stats = {}
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            stats["grad_norm"] = gnorm
+        step = state.step + 1
+        lr_t = sched(step)
+        stats["lr"] = lr_t
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * delta
+            return newp.astype(p.dtype), m.astype(mu_dtype), v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step=step, mu=new_m, nu=new_v), stats
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr=1e-3, **kw) -> Optimizer:
+    """Paper setup: Adam, lr=1e-3 (Sec. III-C)."""
+    return adamw(lr=lr, weight_decay=0.0, **kw)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0,
+        max_grad_norm: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    class SgdState(NamedTuple):
+        step: jax.Array
+        mu: PyTree
+
+    def init(params):
+        return SgdState(jnp.zeros((), jnp.int32), tree_zeros_like(params))
+
+    def update(grads, state, params):
+        stats = {}
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            stats["grad_norm"] = gnorm
+        step = state.step + 1
+        lr_t = sched(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state.mu, grads)
+        newp = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr_t * m.astype(jnp.float32)).astype(p.dtype),
+                            params, mu)
+        return newp, SgdState(step, mu), stats
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+same-family config and runs one forward + one train step + (where defined)
+one decode step on CPU, asserting output shapes and no NaNs.
+
+The FULL configs are exercised only via launch/dryrun.py (per assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import RunConfig
+from repro.models.registry import get_model, reduced_config
+from repro.train import optim
+from repro.train.loop import init_train_state, make_train_step
+
+RUN = RunConfig()
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced_config(get_config(arch))
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg, RUN)
+    batch = _batch(cfg, key)
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    logits = api.forward(params, cfg, RUN, batch["tokens"], **extra)
+    assert logits.shape[:2] == (B, S)
+    assert logits.shape[2] >= cfg.vocab
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab]).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_no_nans(arch):
+    cfg = reduced_config(get_config(arch))
+    opt = optim.adam(1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, RUN, opt)
+    step = jax.jit(make_train_step(cfg, RUN, opt))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0, (arch, loss)
+    # params actually changed
+    flat = jax.tree.leaves(state.params)
+    assert all(bool(jnp.isfinite(x).all()) for x in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduced_config(get_config(arch))
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg, RUN)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = jax.random.normal(key, (B, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        kwargs["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_model))
+    state = api.init_decode_state(params, cfg, RUN, B, 64, **kwargs)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    dec = jax.jit(lambda p, t, s: api.decode_step(p, cfg, RUN, t, s))
+    logits, state = dec(params, tok, state)
+    logits2, state = dec(params, tok + 1, state)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab]).all()), arch
+    assert bool(jnp.isfinite(logits2[..., :cfg.vocab]).all()), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-370m",
+                                  "recurrentgemma-9b"])
+def test_decode_matches_forward_prefix(arch):
+    """Greedy decode over a short prompt agrees with teacher-forced forward
+    logits at each position (the KV cache is consistent with full attention)."""
+    cfg = reduced_config(get_config(arch))
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg, RUN)
+    toks = jax.random.randint(jax.random.fold_in(key, 3), (1, 8), 0, cfg.vocab)
+    full = api.forward(params, cfg, RUN, toks)
+    state = api.init_decode_state(params, cfg, RUN, 1, 16)
+    for t in range(8):
+        logits, state = api.decode_step(params, cfg, RUN, toks[:, t:t + 1],
+                                        state)
+        np.testing.assert_allclose(np.asarray(logits[0, 0, :cfg.vocab]),
+                                   np.asarray(full[0, t, :cfg.vocab]),
+                                   atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-370m",
+                                  "recurrentgemma-9b", "granite-moe-3b-a800m"])
+def test_chunked_ce_matches_dense(arch):
+    """The §Perf chunked LM-head+CE path is exact (not an approximation)."""
+    import dataclasses
+    cfg = reduced_config(get_config(arch))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, RUN)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    a = float(api.train_loss(params, cfg, RUN, batch))
+    b = float(api.train_loss(params, cfg,
+                             dataclasses.replace(RUN, ce_chunk=8), batch))
+    c = float(api.train_loss(params, cfg,
+                             dataclasses.replace(RUN, ce_chunk=8,
+                                                 scan_layers=False), batch))
+    np.testing.assert_allclose(a, b, rtol=3e-5)
+    np.testing.assert_allclose(a, c, rtol=3e-5)
+
+
+def test_unrolled_stack_matches_scan():
+    """scan_layers=False (dry-run cost mode) computes the same function."""
+    cfg = reduced_config(get_config("qwen2-1.5b"))
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg, RUN)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    a = api.forward(params, cfg, RUN, toks)
+    import dataclasses
+    run2 = dataclasses.replace(RUN, scan_layers=False)
+    b = api.forward(params, cfg, run2, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)

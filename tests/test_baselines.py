@@ -1,0 +1,55 @@
+"""Baseline compressors: paper-ablation block AE, sz-like, zfp-like."""
+import numpy as np
+import pytest
+
+from repro.baselines import block_ae, szlike, zfplike
+from repro.data import synthetic
+from repro.data.blocks import Normalizer, block_nd, nrmse
+
+
+@pytest.fixture(scope="module")
+def field():
+    return synthetic.e3sm_like(t=24, h=32, w=32, seed=0)
+
+
+def test_szlike_pointwise_bound(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    for eb in (0.1, 0.01):
+        dec, nbytes = szlike.compress(norm, eb)
+        assert np.abs(dec - norm).max() <= eb + 1e-5
+        assert nbytes < norm.size * 4
+
+
+def test_szlike_monotone_tradeoff(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    curve = szlike.compression_curve(norm, [0.2, 0.02])
+    assert curve[0]["cr"] > curve[1]["cr"]
+    assert curve[0]["nrmse"] > curve[1]["nrmse"]
+
+
+def test_zfplike_roundtrip(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    dec, nbytes = zfplike.compress(norm, 0.01)
+    assert dec.shape == norm.shape
+    assert np.isfinite(dec).all()
+    assert nrmse(norm, dec) < 0.05
+    assert nbytes < norm.size * 4
+
+
+def test_zfplike_nondivisible_shapes():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((7, 9, 10)).astype(np.float32)
+    dec, _ = zfplike.compress(x, 0.05)
+    assert dec.shape == x.shape
+
+
+def test_block_ae_baseline_trains_and_compresses(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    blocks, _ = block_nd(norm, (6, 16, 16))
+    base = block_ae.BlockAEBaseline(in_dim=blocks.shape[1], hidden=64,
+                                    latent=16, epochs=10, bin_size=0.02)
+    base.fit(blocks, seed=0)
+    recon, nbytes = base.compress(blocks)
+    assert recon.shape == blocks.shape
+    assert nbytes < blocks.size * 4
+    assert nrmse(blocks, recon) < nrmse(blocks, np.zeros_like(blocks))

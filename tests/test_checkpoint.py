@@ -1,0 +1,164 @@
+"""Checkpoint/restart, torn-save fallback, retention, elastic resharding, and
+error-bounded compressed checkpoints."""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import (CheckpointManager, restore_compressed,
+                                      save_compressed)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layer": {"w": jax.random.normal(k, (32, 16)),
+                      "b": jnp.zeros((16,))},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree(3)
+    mgr.save(3, t)
+    step, back = mgr.restore()
+    assert step == 3
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), t, back)
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, _tree(1))
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retention=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_torn_save_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    # corrupt the newest step (simulated torn write)
+    with open(os.path.join(mgr._step_dir(2), "arrays.npz"), "wb") as f:
+        f.write(b"garbage")
+    step, back = mgr.restore()
+    assert step == 1
+    assert int(back["step"]) == 1
+
+
+def test_hash_mismatch_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, _tree(5))
+    # tamper one tensor but keep the npz valid
+    d = mgr._step_dir(5)
+    data = dict(np.load(os.path.join(d, "arrays.npz")))
+    data["t0"] = data["t0"] + 1.0
+    np.savez(os.path.join(d, "arrays.npz"), **data)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore()
+
+
+def test_elastic_restore_onto_different_device_count(tmp_path):
+    """Save from a 1-device layout, restore sharded onto N host devices (or
+    1 — the point is the API path: logical arrays -> any mesh)."""
+    from jax.sharding import PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree(7)
+    mgr.save(7, t)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    specs = {"layer": {"w": P(), "b": P()}, "step": P()}
+    step, back = mgr.restore(mesh=mesh, shardings=specs)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), t, back)
+
+
+def test_compressed_checkpoint_error_bound(tmp_path):
+    """Every float block of the restored tree obeys ||x - x^G||_2 <= tau."""
+    path = str(tmp_path / "ck.gae")
+    # trained-net-like weights: low-rank structure + small noise (pure iid
+    # noise is incompressible and falls back to raw storage — also tested)
+    k = jax.random.PRNGKey(0)
+    lowrank = (jax.random.normal(k, (2000, 4)) @
+               jax.random.normal(jax.random.fold_in(k, 1), (4, 64)))
+    tree = {"big": lowrank + 0.01 * jax.random.normal(
+                jax.random.fold_in(k, 2), (2000, 64)),
+            "small": jnp.arange(5, dtype=jnp.float32),
+            "ints": jnp.arange(10, dtype=jnp.int32)}
+    tau = 0.5
+    stats = save_compressed(path, tree, tau=tau, bin_size=1e-3, block=64,
+                            min_size=1024)
+    back = restore_compressed(path)
+    assert stats["ratio"] > 1.0
+    np.testing.assert_array_equal(np.asarray(back["ints"]),
+                                  np.asarray(tree["ints"]))
+    np.testing.assert_array_equal(np.asarray(back["small"]),
+                                  np.asarray(tree["small"]))
+    flat = np.asarray(tree["big"], np.float32).reshape(-1)
+    rflat = np.asarray(back["big"], np.float32).reshape(-1)
+    pad = -flat.size % 64
+    fb = np.pad(flat, (0, pad)).reshape(-1, 64)
+    rb = np.pad(rflat, (0, pad)).reshape(-1, 64)
+    errs = np.linalg.norm(fb - rb, axis=1)
+    assert errs.max() <= tau * (1 + 1e-5)
+
+
+def test_resilient_runner_recovers_from_injected_failures(tmp_path):
+    """Crash at steps 3 and 7 -> runner restores and completes all steps with
+    the deterministic data stream intact."""
+    from repro.runtime.failures import ResilientRunner, chaos_wrap
+
+    seen_batches = []
+
+    def step_fn(state, batch):
+        seen_batches.append(int(batch["i"]))
+        return state + 1, {"loss": 1.0 / (state + 1.0)}
+
+    def data_iter(start):
+        def gen():
+            s = start
+            while True:
+                yield {"i": s}
+                s += 1
+        return iter(gen())
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(chaos_wrap(step_fn, {3, 7}), mgr, data_iter,
+                             save_every=2, max_retries=5)
+    state, end = runner.run(jnp.zeros(()), 0, 10)
+    assert end == 10
+    assert runner.stats.restores == 2
+    # deterministic replay: the exact restored-step batches were re-seen
+    assert sorted(set(seen_batches)) == list(range(10))
+
+
+def test_runner_skips_nan_batches(tmp_path):
+    def step_fn(state, batch):
+        loss = float("nan") if int(batch["i"]) == 2 else 0.5
+        return state + 1, {"loss": jnp.asarray(loss)}
+
+    def data_iter(start):
+        def gen():
+            s = start
+            while True:
+                yield {"i": s}
+                s += 1
+        return iter(gen())
+
+    from repro.runtime.failures import ResilientRunner
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(step_fn, mgr, data_iter, save_every=100,
+                             anomaly_policy="skip")
+    _, end = runner.run(jnp.zeros(()), 0, 6)
+    assert runner.stats.skipped_batches == 1
+    assert end == 6

@@ -1,0 +1,75 @@
+"""Huffman / index-set / quantization bitstream tests (incl. hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import entropy
+from repro.core.quantization import dequantize, quantize, quantization_error_bound
+import jax.numpy as jnp
+
+
+def test_huffman_roundtrip_basic():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-50, 50, size=5000).astype(np.int64)
+    stream = entropy.huffman_compress(vals)
+    out = entropy.huffman_decompress(stream)
+    np.testing.assert_array_equal(out, vals)
+
+
+def test_huffman_skewed_distribution_compresses():
+    rng = np.random.default_rng(1)
+    vals = np.round(rng.standard_normal(20000) * 3).astype(np.int64)
+    stream = entropy.huffman_compress(vals)
+    assert stream.nbytes() < vals.size * 8 * 0.25  # well under raw int64
+
+
+def test_huffman_single_symbol():
+    vals = np.zeros(100, np.int64)
+    stream = entropy.huffman_compress(vals)
+    np.testing.assert_array_equal(entropy.huffman_decompress(stream), vals)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=500))
+def test_huffman_roundtrip_property(values):
+    vals = np.asarray(values, np.int64)
+    stream = entropy.huffman_compress(vals)
+    np.testing.assert_array_equal(entropy.huffman_decompress(stream), vals)
+
+
+def test_index_sets_roundtrip():
+    rng = np.random.default_rng(2)
+    dim = 96
+    sets = [np.sort(rng.choice(dim, size=rng.integers(0, 20), replace=False)
+                    ).astype(np.int64) for _ in range(50)]
+    blob = entropy.encode_index_sets([s.astype(np.int32) for s in sets], dim)
+    out = entropy.decode_index_sets(blob)
+    assert len(out) == len(sets)
+    for a, b in zip(sets, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_index_sets_empty():
+    blob = entropy.encode_index_sets([np.zeros(0, np.int32)] * 3, 16)
+    out = entropy.decode_index_sets(blob)
+    assert len(out) == 3 and all(s.size == 0 for s in out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(1e-4, 10.0), st.lists(st.floats(-100, 100, allow_nan=False,
+                                                 width=32), min_size=1, max_size=64))
+def test_quantization_error_within_half_bin(bin_size, values):
+    x = jnp.asarray(np.asarray(values, np.float32))
+    deq = dequantize(quantize(x, bin_size), bin_size)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    assert np.all(err <= bin_size / 2 + 1e-5 * bin_size + 1e-6)
+
+
+def test_quantization_l2_bound_formula():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    b = 0.05
+    deq = dequantize(quantize(x, b), b)
+    l2 = float(np.linalg.norm(np.asarray(deq - x)))
+    assert l2 <= quantization_error_bound(b, 256) + 1e-6
