@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 smoke gate: unit tests, an end-to-end compress -> container ->
+# verify run, and a seeded corruption-fuzz pass over the written archive.
+# Everything here must stay green; run before merging.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+OUT="${TMPDIR:-/tmp}/smoke_archive.rba"
+
+echo "== 1/3 unit tests =="
+python -m pytest -x -q
+
+echo "== 2/3 end-to-end compress + container verify =="
+python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
+    --epochs-scale 0.25 --chunk-hyperblocks 32 --out "$OUT" --verify
+
+echo "== 3/3 corruption fuzz (seeded) =="
+python -m repro.runtime.faultinject "$OUT" --trials 64 --seed 0
+
+rm -f "$OUT"
+echo "smoke OK"

@@ -1,3 +1,6 @@
 """The paper's contribution: attention-based hierarchical compression with
 guaranteed error bounds (HBAE + BAE + GAE + bitstream)."""
-from repro.core.pipeline import Archive, CompressorConfig, HierarchicalCompressor  # noqa: F401
+from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,  # noqa: F401
+                               DamageReport, MalformedStream, TruncatedArchive)
+from repro.core.pipeline import (Archive, ArchiveChunk, CompressorConfig,  # noqa: F401
+                                 HierarchicalCompressor)

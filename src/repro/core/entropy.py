@@ -14,9 +14,11 @@ from __future__ import annotations
 import heapq
 import struct
 import zlib
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
+
+from repro.core.errors import MalformedStream, TruncatedArchive
 
 MAX_CODE_LEN = 16
 
@@ -104,28 +106,84 @@ def huffman_encode(values: np.ndarray, book: HuffmanBook) -> bytes:
     return np.packbits(bits.astype(np.uint8)).tobytes()
 
 
+def rebuild_canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Reconstruct canonical codes from (length,symbol)-sorted code lengths.
+
+    This is the untrusted inverse of ``build_huffman``'s assignment loop: the
+    on-disk book stores only symbols + lengths, and this validates that the
+    lengths describe a realizable prefix code (in-range, sorted, Kraft-
+    feasible) before any decode table is built from them.
+    """
+    lengths = np.asarray(lengths)
+    if lengths.size == 0:
+        return np.zeros(0, np.uint32)
+    if lengths.min() < 1 or lengths.max() > MAX_CODE_LEN:
+        raise MalformedStream(
+            f"Huffman code length out of range [1, {MAX_CODE_LEN}]")
+    if np.any(np.diff(lengths.astype(np.int64)) < 0):
+        raise MalformedStream("Huffman code lengths not in canonical order")
+    codes = np.zeros(lengths.size, np.uint32)
+    code = 0
+    prev_len = int(lengths[0])
+    for i in range(lengths.size):
+        li = int(lengths[i])
+        code <<= li - prev_len
+        if code >= (1 << li):
+            raise MalformedStream("Huffman code space overflow (Kraft violation)")
+        codes[i] = code
+        prev_len = li
+        code += 1
+    return codes
+
+
+def rebuild_book(symbols: np.ndarray, lengths: np.ndarray) -> HuffmanBook:
+    """Validated ``HuffmanBook`` from untrusted serialized (symbols, lengths)."""
+    symbols = np.asarray(symbols, np.int64)
+    lengths = np.asarray(lengths, np.uint8)
+    if symbols.size != lengths.size:
+        raise MalformedStream("Huffman book symbol/length count mismatch")
+    return HuffmanBook(symbols=symbols, lengths=lengths,
+                       codes=rebuild_canonical_codes(lengths))
+
+
 def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
-    """Table-driven decode (2^16 lookup)."""
+    """Table-driven decode (2^16 lookup), bounds-checked against corrupt input:
+    an undecodable prefix raises ``MalformedStream`` and running out of payload
+    bits before ``count`` symbols raises ``TruncatedArchive``."""
     if count == 0:
         return np.zeros(0, np.int64)
+    if count < 0:
+        raise MalformedStream(f"negative symbol count {count}")
+    if book.symbols.size == 0:
+        raise MalformedStream("empty Huffman book with nonzero symbol count")
     table_sym = np.zeros(1 << MAX_CODE_LEN, np.int64)
-    table_len = np.zeros(1 << MAX_CODE_LEN, np.uint8)
+    table_len = np.zeros(1 << MAX_CODE_LEN, np.uint8)   # 0 = invalid prefix
     for s, l, c in zip(book.symbols, book.lengths, book.codes):
         l = int(l)
+        if not 1 <= l <= MAX_CODE_LEN:
+            raise MalformedStream(f"Huffman code length {l} out of range")
         base = int(c) << (MAX_CODE_LEN - l)
         span = 1 << (MAX_CODE_LEN - l)
+        if base + span > (1 << MAX_CODE_LEN):
+            raise MalformedStream("Huffman code outside table range")
         table_sym[base:base + span] = s
         table_len[base:base + span] = l
+    total_bits = len(data) * 8
     bits = np.unpackbits(np.frombuffer(data, np.uint8))
     bits = np.concatenate([bits, np.zeros(MAX_CODE_LEN, np.uint8)])  # tail pad
     out = np.empty(count, np.int64)
     pos = 0
-    # windowed ints, chunked for speed
     weights = (1 << np.arange(MAX_CODE_LEN - 1, -1, -1)).astype(np.int64)
     for i in range(count):
         w = int(bits[pos:pos + MAX_CODE_LEN] @ weights)
+        step = int(table_len[w])
+        if step == 0:
+            raise MalformedStream(f"undecodable Huffman prefix at bit {pos}")
+        if pos + step > total_bits:
+            raise TruncatedArchive(
+                f"Huffman payload exhausted at symbol {i}/{count}")
         out[i] = table_sym[w]
-        pos += int(table_len[w])
+        pos += step
     return out
 
 
@@ -181,11 +239,36 @@ def encode_index_sets(index_sets: list[np.ndarray], dim: int) -> bytes:
     return zlib.compress(header + lens_b + payload, level=9)
 
 
-def decode_index_sets(blob: bytes) -> list[np.ndarray]:
-    raw = zlib.decompress(blob)
+def decode_index_sets(blob: bytes, expect_dim: Optional[int] = None,
+                      expect_sets: Optional[int] = None) -> list[np.ndarray]:
+    """Decode (and validate) the index bitmask blob.
+
+    ``expect_dim`` / ``expect_sets`` cross-check the self-declared header
+    against what the caller knows (basis dimension, GAE block count) so a
+    corrupt-but-decompressible blob cannot smuggle out-of-range indices into
+    the basis gather downstream.
+    """
+    try:
+        raw = zlib.decompress(blob)
+    except zlib.error as e:
+        raise MalformedStream(f"index blob DEFLATE error: {e}") from e
+    if len(raw) < 8:
+        raise TruncatedArchive("index blob shorter than its header")
     n, dim = struct.unpack("<II", raw[:8])
+    if expect_dim is not None and dim != expect_dim:
+        raise MalformedStream(
+            f"index blob dimension {dim} != basis dimension {expect_dim}")
+    if expect_sets is not None and n != expect_sets:
+        raise MalformedStream(f"index blob has {n} sets, expected {expect_sets}")
+    if len(raw) < 8 + 4 * n:
+        raise TruncatedArchive("index blob length table truncated")
     lens = np.frombuffer(raw[8:8 + 4 * n], np.uint32).astype(np.int64)
+    if lens.size and lens.max() > dim:
+        raise MalformedStream(
+            f"index prefix length {int(lens.max())} exceeds dimension {dim}")
     bits = np.unpackbits(np.frombuffer(raw[8 + 4 * n:], np.uint8))
+    if int(lens.sum()) > bits.size:
+        raise TruncatedArchive("index bitmask payload truncated")
     out = []
     pos = 0
     for plen in lens:
@@ -200,4 +283,7 @@ def zlib_pack(data: bytes) -> bytes:
 
 
 def zlib_unpack(data: bytes) -> bytes:
-    return zlib.decompress(data)
+    try:
+        return zlib.decompress(data)
+    except zlib.error as e:
+        raise MalformedStream(f"DEFLATE error: {e}") from e

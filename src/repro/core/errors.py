@@ -1,0 +1,78 @@
+"""Typed failure taxonomy + damage reporting for the archive read path.
+
+Every failure on the untrusted decode path (on-disk container, Huffman
+bitstreams, index bitmasks, model manifests) is raised as a subclass of
+``ArchiveError`` — never a raw ``struct.error`` / ``zlib.error`` /
+``IndexError``.  Callers can therefore distinguish "this archive is damaged"
+from programming errors, and ``decompress(strict=False)`` can degrade
+gracefully per chunk instead of crashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class ArchiveError(Exception):
+    """Base class for all archive/bitstream decode failures."""
+
+
+class TruncatedArchive(ArchiveError):
+    """The container or a stream ended before its declared length."""
+
+
+class ChecksumMismatch(ArchiveError):
+    """A section's CRC32/sha256 digest does not match its contents."""
+
+
+class MalformedStream(ArchiveError):
+    """A stream is structurally invalid (bad magic, impossible code lengths,
+    out-of-range indices, count mismatches, undecodable prefix, ...)."""
+
+
+@dataclasses.dataclass
+class ChunkDamage:
+    """One damaged hyper-block stripe of an archive."""
+    chunk: int              # chunk index in the container
+    hb_start: int           # first hyper-block covered by the chunk
+    n_hyperblocks: int      # hyper-blocks covered by the chunk
+    section: str            # which part failed ("chunk", "hb_stream", "gae", ...)
+    error: str              # repr of the underlying ArchiveError
+
+
+@dataclasses.dataclass
+class DamageReport:
+    """Per-chunk damage accounting from a tolerant (``strict=False``) decode.
+
+    Hyper-blocks listed here carry NO guarantee; every hyper-block not listed
+    decoded from digest-verified, cross-checked streams and still satisfies the
+    per-block l2 <= tau bound.
+    """
+    n_hyperblocks: int
+    n_chunks: int
+    damaged: list[ChunkDamage] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.damaged
+
+    def damaged_hyperblocks(self) -> set[int]:
+        out: set[int] = set()
+        for d in self.damaged:
+            out.update(range(d.hb_start, d.hb_start + d.n_hyperblocks))
+        return out
+
+    def intact_fraction(self) -> float:
+        if self.n_hyperblocks == 0:
+            return 1.0
+        return 1.0 - len(self.damaged_hyperblocks()) / self.n_hyperblocks
+
+    def summary(self) -> str:
+        if self.ok:
+            return f"intact: {self.n_chunks} chunks, {self.n_hyperblocks} hyper-blocks"
+        lines = [f"damaged: {len(self.damaged_hyperblocks())}/"
+                 f"{self.n_hyperblocks} hyper-blocks in "
+                 f"{len({d.chunk for d in self.damaged})}/{self.n_chunks} chunks"]
+        for d in self.damaged:
+            lines.append(f"  chunk {d.chunk} [hb {d.hb_start}:"
+                         f"{d.hb_start + d.n_hyperblocks}] {d.section}: {d.error}")
+        return "\n".join(lines)

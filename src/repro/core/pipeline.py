@@ -16,8 +16,9 @@ coefficients and corresponding index information", Sec. III-C); pass
 from __future__ import annotations
 
 import dataclasses
-import pickle
-from typing import Callable, Optional
+import json
+import math
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,8 @@ from repro.core import bae as bae_mod
 from repro.core import entropy, gae
 from repro.core import hbae as hbae_mod
 from repro.core import training
+from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,
+                               DamageReport, MalformedStream)
 from repro.core.quantization import dequantize, quantize
 
 Array = jax.Array
@@ -56,26 +59,92 @@ class CompressorConfig:
 
 
 @dataclasses.dataclass
-class Archive:
-    """Compressed representation + size accounting."""
+class ArchiveChunk:
+    """One hyper-block stripe: every stream needed to decode hyper-blocks
+    ``[hb_start, hb_start + n_hyperblocks)`` independently of other chunks."""
+    hb_start: int
     n_hyperblocks: int
     hb_stream: entropy.HuffmanStream
     bae_streams: list[entropy.HuffmanStream]
     gae_coeff_stream: Optional[entropy.HuffmanStream]
     gae_index_blob: bytes
     gae_binexp_blob: bytes
+
+
+@dataclasses.dataclass
+class Archive:
+    """Compressed representation, striped into independently-decodable chunks.
+
+    ``chunks`` entries may be ``None`` after a tolerant container read
+    (``archive_io.read_archive(strict=False)``): the stripe failed its digest
+    or framing checks and ``chunk_errors[i]`` holds the reason.
+    """
+    n_hyperblocks: int
     n_values: int                    # original float32 count
+    chunk_hyperblocks: int           # stripe width (hyper-blocks per chunk)
+    gae_dim: int                     # PCA basis dimension (0 = no GAE section)
+    chunks: list[Optional[ArchiveChunk]]
+    chunk_errors: dict[int, str] = dataclasses.field(default_factory=dict)
 
     def compressed_bytes(self) -> int:
-        total = self.hb_stream.nbytes()
-        total += sum(s.nbytes() for s in self.bae_streams)
-        if self.gae_coeff_stream is not None:
-            total += self.gae_coeff_stream.nbytes()
-        total += len(self.gae_index_blob) + len(self.gae_binexp_blob)
-        return total + 32  # fixed header
+        """Honest on-disk cost: the exact size of the serialized container
+        (magic, section table, digests, framing — everything)."""
+        from repro.runtime import archive_io   # runtime owns the container
+        return len(archive_io.serialize_archive(self))
 
     def compression_ratio(self, include_model_bytes: int = 0) -> float:
         return (self.n_values * 4) / (self.compressed_bytes() + include_model_bytes)
+
+
+MODEL_FORMAT = "repro-compressor-v2"
+
+# Static (non-array) param-tree leaves that the manifest records by name +
+# field dict instead of pickling.  Anything else non-array fails save loudly.
+def _static_registry() -> dict:
+    from repro.core.attention import AttnMeta
+    from repro.core.hbae import HbaeMeta
+    return {"AttnMeta": AttnMeta, "HbaeMeta": HbaeMeta}
+
+
+def _flatten_params(obj, prefix: str, leaves: list, statics: dict) -> None:
+    """Walk dict/list param trees into (path, array) leaves; registered static
+    dataclasses are recorded as JSON-able entries in ``statics``."""
+    if isinstance(obj, dict):
+        for key in sorted(obj):
+            _flatten_params(obj[key], f"{prefix}/{key}" if prefix else key,
+                            leaves, statics)
+    elif isinstance(obj, (list, tuple)):
+        for i, item in enumerate(obj):
+            _flatten_params(item, f"{prefix}/{i}" if prefix else str(i),
+                            leaves, statics)
+    elif type(obj).__name__ in _static_registry():
+        statics[prefix] = {"class": type(obj).__name__,
+                           "fields": dataclasses.asdict(obj)}
+    elif hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        leaves.append((prefix, np.asarray(obj)))
+    else:
+        raise TypeError(f"cannot serialize param leaf {prefix!r} "
+                        f"of type {type(obj).__name__}")
+
+
+def _assemble_params(entries: list, statics: dict) -> dict:
+    """Rebuild the nested dict tree from (path, value) pairs + statics."""
+    registry = _static_registry()
+    root: dict = {}
+    items = list(entries)
+    for path, spec in statics.items():
+        if spec.get("class") not in registry:
+            raise MalformedStream(f"unknown static class {spec.get('class')!r}")
+        items.append((path, registry[spec["class"]](**spec["fields"])))
+    for path, value in items:
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+            if not isinstance(node, dict):
+                raise MalformedStream(f"conflicting manifest paths at {path!r}")
+        node[parts[-1]] = value
+    return root
 
 
 class HierarchicalCompressor:
@@ -161,7 +230,20 @@ class HierarchicalCompressor:
         return gae_blocks.reshape(shape3d)
 
     # -- compress / decompress ----------------------------------------------
-    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None) -> Archive:
+    def _chunk_width(self, requested: int, with_gae: bool) -> int:
+        """Stripe width in hyper-blocks, aligned so every chunk covers a whole
+        number of GAE blocks (chunks must decode independently)."""
+        cfg = self.cfg
+        width = max(1, int(requested))
+        if with_gae:
+            d_gae = cfg.gae_block_elems or cfg.block_elems
+            per_hb = cfg.k * cfg.block_elems
+            align = d_gae // math.gcd(d_gae, per_hb)   # chunk width multiple
+            width = ((width + align - 1) // align) * align
+        return width
+
+    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None,
+                 chunk_hyperblocks: int = 64) -> Archive:
         cfg = self.cfg
         n, k, d = hyperblocks.shape
 
@@ -169,103 +251,293 @@ class HierarchicalCompressor:
         latent = np.asarray(jax.jit(hbae_mod.hbae_encode)(self.hbae_params,
                                                           jnp.asarray(hyperblocks)))
         q_lh = np.asarray(quantize(jnp.asarray(latent), cfg.hb_bin))
-        hb_stream = entropy.huffman_compress(q_lh)
         lat_deq = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
         y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params,
                                                      jnp.asarray(lat_deq)))
 
         # 2. block-wise residual AE stage(s)
         recon = y
-        bae_streams = []
+        q_lbs: list[np.ndarray] = []     # per stage: (n*k, bae_latent) ints
         if cfg.use_bae:
             resid = (hyperblocks - recon).reshape(n * k, d)
             for p in self.bae_params:
                 lb = np.asarray(jax.jit(bae_mod.bae_encode)(p, jnp.asarray(resid)))
                 q_lb = np.asarray(quantize(jnp.asarray(lb), cfg.bae_bin))
-                bae_streams.append(entropy.huffman_compress(q_lb))
+                q_lbs.append(q_lb)
                 lb_deq = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
                 r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb_deq)))
                 recon = recon + r_hat.reshape(n, k, d)
                 resid = resid - r_hat
 
         # 3. GAE error-bound post-processing
-        gae_coeff_stream = None
-        index_blob = b""
-        binexp_blob = b""
+        codes: list[gae.GAEBlockCode] = []
+        gae_dim = 0
         if tau is not None:
             if self.basis is None:
                 self.fit_basis(hyperblocks)
             x_gae = self._gae_view(hyperblocks)
             r_gae = self._gae_view(recon)
-            _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis, tau, cfg.gae_bin)
-            # store coefficients in ascending-index order (bitmask decode order)
-            all_coeffs, index_sets, binexps = [], [], []
-            for c in codes:
-                asc = np.argsort(c.indices)
-                index_sets.append(np.sort(c.indices))
-                all_coeffs.append(c.qcoeffs[asc])
-                binexps.append(c.bin_exp)
-            coeffs = (np.concatenate(all_coeffs) if all_coeffs else
-                      np.zeros(0, np.int64))
-            if coeffs.size:
-                gae_coeff_stream = entropy.huffman_compress(coeffs)
-            dim = self.basis.shape[0]
-            index_blob = entropy.encode_index_sets(index_sets, dim)
-            binexp_blob = entropy.zlib_pack(np.asarray(binexps, np.uint8).tobytes())
+            _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis, tau,
+                                             cfg.gae_bin)
+            gae_dim = int(self.basis.shape[0])
 
-        return Archive(n_hyperblocks=n, hb_stream=hb_stream, bae_streams=bae_streams,
-                       gae_coeff_stream=gae_coeff_stream, gae_index_blob=index_blob,
-                       gae_binexp_blob=binexp_blob, n_values=hyperblocks.size)
+        # 4. stripe everything into independently-decodable chunks
+        width = self._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
+        d_gae = cfg.gae_block_elems or cfg.block_elems
+        gae_per_hb = (k * d) // d_gae if tau is not None else 0
+        chunks: list[Optional[ArchiveChunk]] = []
+        for start in range(0, n, width):
+            n_hb = min(width, n - start)
+            hb_stream = entropy.huffman_compress(q_lh[start:start + n_hb])
+            bae_streams = [entropy.huffman_compress(
+                q_lb[start * k:(start + n_hb) * k]) for q_lb in q_lbs]
+            coeff_stream = None
+            index_blob = binexp_blob = b""
+            if tau is not None:
+                cchunk = codes[start * gae_per_hb:(start + n_hb) * gae_per_hb]
+                # coefficients in ascending-index order (bitmask decode order)
+                all_coeffs, index_sets, binexps = [], [], []
+                for c in cchunk:
+                    asc = np.argsort(c.indices)
+                    index_sets.append(np.sort(c.indices))
+                    all_coeffs.append(c.qcoeffs[asc])
+                    binexps.append(c.bin_exp)
+                coeffs = (np.concatenate(all_coeffs) if all_coeffs else
+                          np.zeros(0, np.int64))
+                if coeffs.size:
+                    coeff_stream = entropy.huffman_compress(coeffs)
+                index_blob = entropy.encode_index_sets(index_sets, gae_dim)
+                binexp_blob = entropy.zlib_pack(
+                    np.asarray(binexps, np.uint8).tobytes())
+            chunks.append(ArchiveChunk(
+                hb_start=start, n_hyperblocks=n_hb, hb_stream=hb_stream,
+                bae_streams=bae_streams, gae_coeff_stream=coeff_stream,
+                gae_index_blob=index_blob, gae_binexp_blob=binexp_blob))
 
-    def decompress(self, archive: Archive) -> np.ndarray:
+        return Archive(n_hyperblocks=n, n_values=hyperblocks.size,
+                       chunk_hyperblocks=width, gae_dim=gae_dim, chunks=chunks)
+
+    # -- decode helpers ------------------------------------------------------
+    def _decode_chunk(self, chunk: ArchiveChunk, archive: Archive
+                      ) -> tuple[np.ndarray, list[np.ndarray],
+                                 list[gae.GAEBlockCode]]:
+        """Decode one chunk's streams into quantized latents + GAE codes,
+        cross-checking every count against the model configuration.  Raises
+        a typed ``ArchiveError`` on any inconsistency."""
+        cfg = self.cfg
+        n_hb, k, d = chunk.n_hyperblocks, cfg.k, cfg.block_elems
+        want_hb = n_hb * cfg.hb_latent
+        if chunk.hb_stream.count != want_hb:
+            raise MalformedStream(
+                f"hb stream has {chunk.hb_stream.count} symbols, "
+                f"expected {want_hb}")
+        q_lh = entropy.huffman_decompress(chunk.hb_stream)\
+            .reshape(n_hb, cfg.hb_latent)
+        if len(chunk.bae_streams) != len(self.bae_params):
+            raise MalformedStream(
+                f"{len(chunk.bae_streams)} BAE streams for "
+                f"{len(self.bae_params)} BAE stages")
+        q_lbs = []
+        for stream in chunk.bae_streams:
+            want = n_hb * k * cfg.bae_latent
+            if stream.count != want:
+                raise MalformedStream(
+                    f"BAE stream has {stream.count} symbols, expected {want}")
+            q_lbs.append(entropy.huffman_decompress(stream)
+                         .reshape(n_hb * k, cfg.bae_latent))
+        codes: list[gae.GAEBlockCode] = []
+        if chunk.gae_index_blob:
+            if archive.gae_dim <= 0:
+                raise MalformedStream("GAE section present but gae_dim == 0")
+            d_gae = cfg.gae_block_elems or d
+            if (n_hb * k * d) % d_gae:
+                raise MalformedStream(
+                    f"chunk of {n_hb * k * d} values not divisible into "
+                    f"GAE blocks of {d_gae}")
+            n_gae = (n_hb * k * d) // d_gae
+            index_sets = entropy.decode_index_sets(
+                chunk.gae_index_blob, expect_dim=archive.gae_dim,
+                expect_sets=n_gae)
+            binexps = np.frombuffer(
+                entropy.zlib_unpack(chunk.gae_binexp_blob), np.uint8)
+            if binexps.size != n_gae:
+                raise MalformedStream(
+                    f"{binexps.size} bin exponents for {n_gae} GAE blocks")
+            total = int(sum(s.size for s in index_sets))
+            have = (chunk.gae_coeff_stream.count
+                    if chunk.gae_coeff_stream is not None else 0)
+            if have != total:
+                raise MalformedStream(
+                    f"coefficient stream has {have} values, index sets "
+                    f"declare {total}")
+            coeffs = (entropy.huffman_decompress(chunk.gae_coeff_stream)
+                      if chunk.gae_coeff_stream is not None
+                      else np.zeros(0, np.int64))
+            pos = 0
+            for i, idx in enumerate(index_sets):
+                codes.append(gae.GAEBlockCode(
+                    m=idx.size, indices=idx, qcoeffs=coeffs[pos:pos + idx.size],
+                    bin_exp=int(binexps[i])))
+                pos += idx.size
+        return q_lh, q_lbs, codes
+
+    def decompress(self, archive: Archive, strict: bool = True
+                   ) -> Union[np.ndarray, tuple[np.ndarray, DamageReport]]:
+        """Decode an archive back to hyper-blocks.
+
+        ``strict=True`` (default) raises a typed ``ArchiveError`` on the first
+        damaged or inconsistent chunk.  ``strict=False`` returns
+        ``(reconstruction, DamageReport)``: damaged stripes decode from zeroed
+        latents with no GAE correction (and no guarantee), every other stripe
+        is digest-verified and still satisfies the per-block bound.
+        """
         cfg = self.cfg
         n, k, d = archive.n_hyperblocks, cfg.k, cfg.block_elems
-        q_lh = entropy.huffman_decompress(archive.hb_stream).reshape(n, cfg.hb_latent)
+        report = DamageReport(n_hyperblocks=n, n_chunks=len(archive.chunks))
+        if archive.gae_dim and self.basis is None:
+            raise MalformedStream("archive has a GAE section but this "
+                                  "compressor has no fitted basis")
+        if archive.gae_dim and self.basis.shape[0] != archive.gae_dim:
+            raise MalformedStream(
+                f"archive GAE dimension {archive.gae_dim} != basis "
+                f"dimension {self.basis.shape[0]}")
+        if archive.n_values != n * k * d:
+            raise MalformedStream(
+                f"archive declares {archive.n_values} values for "
+                f"{n}x{k}x{d} hyper-blocks")
+
+        q_lh = np.zeros((n, cfg.hb_latent), np.int64)
+        q_lbs = [np.zeros((n * k, cfg.bae_latent), np.int64)
+                 for _ in self.bae_params]
+        gae_codes: dict[int, gae.GAEBlockCode] = {}   # global gae-block index
+        d_gae = cfg.gae_block_elems or d
+        gae_per_hb = (k * d) // d_gae if archive.gae_dim else 0
+
+        covered = 0
+        for ci, chunk in enumerate(archive.chunks):
+            if chunk is None:
+                start = covered
+                n_hb = min(archive.chunk_hyperblocks, n - start)
+                covered += n_hb
+                err = archive.chunk_errors.get(ci, "chunk unreadable")
+                if strict:
+                    raise MalformedStream(f"chunk {ci} damaged: {err}")
+                report.damaged.append(ChunkDamage(
+                    chunk=ci, hb_start=start, n_hyperblocks=n_hb,
+                    section="chunk", error=err))
+                continue
+            if chunk.hb_start != covered:
+                raise MalformedStream(
+                    f"chunk {ci} starts at hyper-block {chunk.hb_start}, "
+                    f"expected {covered}")
+            covered += chunk.n_hyperblocks
+            try:
+                c_lh, c_lbs, c_codes = self._decode_chunk(chunk, archive)
+            except ArchiveError as e:
+                if strict:
+                    raise
+                report.damaged.append(ChunkDamage(
+                    chunk=ci, hb_start=chunk.hb_start,
+                    n_hyperblocks=chunk.n_hyperblocks, section="decode",
+                    error=repr(e)))
+                continue
+            s, e = chunk.hb_start, chunk.hb_start + chunk.n_hyperblocks
+            q_lh[s:e] = c_lh
+            for stage, c_lb in enumerate(c_lbs):
+                q_lbs[stage][s * k:e * k] = c_lb
+            for j, code in enumerate(c_codes):
+                gae_codes[s * gae_per_hb + j] = code
+        if covered != n:
+            raise MalformedStream(
+                f"chunks cover {covered} hyper-blocks, archive declares {n}")
+
         lat = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
-        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params, jnp.asarray(lat)))
+        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params,
+                                                     jnp.asarray(lat)))
         recon = y
-        for p, stream in zip(self.bae_params, archive.bae_streams):
-            q_lb = entropy.huffman_decompress(stream).reshape(n * k, cfg.bae_latent)
+        for p, q_lb in zip(self.bae_params, q_lbs):
             lb = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
             r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb)))
             recon = recon + r_hat.reshape(n, k, d)
 
-        if archive.gae_index_blob:
-            index_sets = entropy.decode_index_sets(archive.gae_index_blob)
-            binexps = np.frombuffer(entropy.zlib_unpack(archive.gae_binexp_blob),
-                                    np.uint8)
-            coeffs = (entropy.huffman_decompress(archive.gae_coeff_stream)
-                      if archive.gae_coeff_stream is not None else np.zeros(0, np.int64))
+        if archive.gae_dim and gae_codes:
             r_gae = self._gae_view(recon)
-            pos = 0
-            codes = []
-            for i, idx in enumerate(index_sets):
-                m = idx.size
-                codes.append(gae.GAEBlockCode(m=m, indices=idx,
-                                              qcoeffs=coeffs[pos:pos + m],
-                                              bin_exp=int(binexps[i])))
-                pos += m
-            out = gae.gae_decode_blocks(r_gae, self.basis, codes, cfg.gae_bin)
-            recon = self._gae_unview(out, recon.shape)
-        return recon
+            idxs = sorted(gae_codes)
+            sub = gae.gae_decode_blocks(r_gae[idxs], self.basis,
+                                        [gae_codes[i] for i in idxs],
+                                        cfg.gae_bin)
+            r_gae[idxs] = sub
+            recon = self._gae_unview(r_gae, recon.shape)
+        if strict:
+            return recon
+        return recon, report
 
     # -- persistence ---------------------------------------------------------
+    # Manifest + npz layout (no pickle anywhere on the read path): a single
+    # .npz holding one array per tensor plus a JSON manifest (uint8 array)
+    # with per-tensor sha256 digests — the same integrity posture as
+    # ``runtime.checkpoint.CheckpointManager``, whose hashing and atomic-write
+    # machinery this reuses.
     def save(self, path: str) -> None:
-        state = {"cfg": self.cfg,
-                 "hbae": jax.device_get(self.hbae_params),
-                 "bae": jax.device_get(self.bae_params),
-                 "basis": self.basis}
-        with open(path, "wb") as f:
-            pickle.dump(state, f)
+        from repro.runtime.archive_io import atomic_write_bytes
+        from repro.runtime.checkpoint import _sha
+
+        leaves: list[tuple[str, np.ndarray]] = []
+        statics: dict[str, dict] = {}
+        _flatten_params({"hbae": jax.device_get(self.hbae_params),
+                         "bae": jax.device_get(self.bae_params)},
+                        "", leaves, statics)
+        if self.basis is not None:
+            leaves.append(("basis", np.asarray(self.basis)))
+        manifest = {"format": MODEL_FORMAT,
+                    "cfg": dataclasses.asdict(self.cfg),
+                    "n_bae_stages": len(self.bae_params),
+                    "has_basis": self.basis is not None,
+                    "statics": statics, "tensors": []}
+        arrays: dict[str, np.ndarray] = {}
+        for i, (tpath, arr) in enumerate(leaves):
+            arrays[f"t{i}"] = arr
+            manifest["tensors"].append(
+                {"key": f"t{i}", "path": tpath, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "sha256": _sha(arr)})
+        arrays["__manifest__"] = np.frombuffer(
+            json.dumps(manifest, sort_keys=True).encode(), np.uint8)
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        atomic_write_bytes(path, buf.getvalue())
 
     @classmethod
     def load(cls, path: str) -> "HierarchicalCompressor":
-        with open(path, "rb") as f:
-            state = pickle.load(f)
-        obj = cls(state["cfg"])
-        obj.hbae_params = state["hbae"]
-        obj.bae_params = state["bae"]
-        obj.basis = state["basis"]
+        from repro.runtime.checkpoint import _sha
+        try:
+            data = np.load(path, allow_pickle=False)
+        except Exception as e:
+            raise MalformedStream(f"unreadable model file {path!r}: {e}") from e
+        if "__manifest__" not in data:
+            raise MalformedStream(f"{path!r} has no manifest (legacy pickle "
+                                  "models are not supported on the read path)")
+        try:
+            manifest = json.loads(bytes(data["__manifest__"]).decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise MalformedStream(f"corrupt model manifest: {e}") from e
+        if manifest.get("format") != MODEL_FORMAT:
+            raise MalformedStream(
+                f"unsupported model format {manifest.get('format')!r}")
+        entries: list[tuple[str, np.ndarray]] = []
+        for t in manifest["tensors"]:
+            if t["key"] not in data:
+                raise MalformedStream(f"model tensor {t['path']} missing")
+            arr = data[t["key"]]
+            if _sha(arr) != t["sha256"]:
+                raise ChecksumMismatch(f"model tensor {t['path']} hash mismatch")
+            entries.append((t["path"], arr))
+        tree = _assemble_params(entries, manifest.get("statics", {}))
+        obj = cls(CompressorConfig(**manifest["cfg"]))
+        obj.hbae_params = tree.get("hbae")
+        bae = tree.get("bae", {})
+        obj.bae_params = [bae[str(i)] for i in range(manifest["n_bae_stages"])]
+        obj.basis = tree.get("basis") if manifest["has_basis"] else None
         return obj
 
     def model_bytes(self) -> int:

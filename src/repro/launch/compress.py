@@ -3,21 +3,37 @@ dataset with the exact S3D/E3SM/XGC geometry: fit HBAE+BAE, compress with a
 user error bound, verify the per-block guarantee, report CR + NRMSE.
 
   python -m repro.launch.compress --dataset s3d --tau 0.5 --quick
+  python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
+      --out /tmp/a.rba --verify
+
+``--out`` writes the durable .rba container (atomic, digest-protected; see
+docs/ARCHIVE_FORMAT.md); ``--verify`` re-reads it from disk and re-checks the
+tau guarantee against the freshly decoded bytes.  Guarantee or verification
+failures exit nonzero with a report instead of a bare assert.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
 
 from repro.configs import get_compressor_config
+from repro.core.errors import ArchiveError
 from repro.core.pipeline import HierarchicalCompressor
 from repro.data import synthetic
 from repro.data.blocks import nrmse
 
 
-def main() -> None:
+def _max_block_err(hyperblocks: np.ndarray, recon: np.ndarray,
+                   d_gae: int) -> np.ndarray:
+    x = hyperblocks.reshape(-1, d_gae)
+    r = recon.reshape(-1, d_gae)
+    return np.linalg.norm(x - r, axis=1)
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="s3d", choices=("s3d", "e3sm", "xgc"))
     ap.add_argument("--tau", type=float, default=0.5,
@@ -25,11 +41,23 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller field + fewer epochs (CI-speed)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--save", default="")
-    args = ap.parse_args()
+    ap.add_argument("--save", default="", help="write the fitted model "
+                    "(manifest+npz, hash-verified on load)")
+    ap.add_argument("--out", default="",
+                    help="write the compressed archive container (.rba)")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-read --out from disk and re-check the guarantee")
+    ap.add_argument("--chunk-hyperblocks", type=int, default=64,
+                    help="container stripe width (corruption blast radius)")
+    ap.add_argument("--epochs-scale", type=float, default=None,
+                    help="scale train epochs (e.g. 0.1 for smoke tests)")
+    args = ap.parse_args(argv)
+    if args.verify and not args.out:
+        ap.error("--verify requires --out")
 
     cfg, hyperblocks = synthetic.make_dataset(args.dataset, quick=args.quick,
-                                              seed=args.seed)
+                                              seed=args.seed,
+                                              epochs_scale=args.epochs_scale)
     print(f"{args.dataset}: {hyperblocks.shape[0]} hyper-blocks of "
           f"(k={hyperblocks.shape[1]}, D={hyperblocks.shape[2]})")
 
@@ -39,25 +67,60 @@ def main() -> None:
         log=lambda s, l: print(f"  step {s}: mse {l:.3e}"))
     print(f"fit in {time.time() - t0:.1f}s")
 
-    archive = comp.compress(hyperblocks, tau=args.tau)
+    archive = comp.compress(hyperblocks, tau=args.tau,
+                            chunk_hyperblocks=args.chunk_hyperblocks)
     recon = comp.decompress(archive)
 
     # hard per-block guarantee check
     d_gae = cfg.gae_block_elems or cfg.block_elems
-    x = hyperblocks.reshape(-1, d_gae)
-    r = recon.reshape(-1, d_gae)
-    errs = np.linalg.norm(x - r, axis=1)
-    assert float(errs.max()) <= args.tau * (1 + 1e-5), errs.max()
+    errs = _max_block_err(hyperblocks, recon, d_gae)
+    if float(errs.max()) > args.tau * (1 + 1e-5):
+        bad = int(np.sum(errs > args.tau * (1 + 1e-5)))
+        print(f"ERROR: tau guarantee violated on {bad}/{errs.size} GAE "
+              f"blocks (max l2 {errs.max():.6f} > tau={args.tau})",
+              file=sys.stderr)
+        return 2
 
     print(f"compression ratio: {archive.compression_ratio():.1f}x  "
           f"(+model cost: "
           f"{archive.compression_ratio(comp.model_bytes()):.1f}x)")
     print(f"NRMSE: {nrmse(hyperblocks, recon):.3e}")
     print(f"max per-block l2: {errs.max():.4f} <= tau={args.tau}")
+
+    if args.out:
+        from repro.runtime import archive_io
+        try:
+            nbytes = archive_io.write_archive(archive, args.out)
+        except OSError as e:
+            print(f"ERROR: cannot write container: {e}", file=sys.stderr)
+            return 3
+        print(f"container written to {args.out} "
+              f"({nbytes:,} bytes = {len(archive.chunks)} chunks; "
+              f"on-disk ratio {hyperblocks.size * 4 / nbytes:.1f}x)")
+    if args.verify:
+        from repro.runtime import archive_io
+        try:
+            archive2 = archive_io.read_archive(args.out)
+            recon2 = comp.decompress(archive2)
+        except ArchiveError as e:
+            print(f"ERROR: verification re-read failed: {e}", file=sys.stderr)
+            return 3
+        errs2 = _max_block_err(hyperblocks, recon2, d_gae)
+        if not np.array_equal(recon2, recon):
+            print("ERROR: on-disk decode differs from in-memory decode",
+                  file=sys.stderr)
+            return 3
+        if float(errs2.max()) > args.tau * (1 + 1e-5):
+            print(f"ERROR: tau guarantee violated after disk round-trip "
+                  f"(max l2 {errs2.max():.6f})", file=sys.stderr)
+            return 3
+        print(f"verify OK: disk round-trip bit-exact, "
+              f"max per-block l2 {errs2.max():.4f} <= tau={args.tau}")
     if args.save:
         comp.save(args.save)
         print(f"model saved to {args.save}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

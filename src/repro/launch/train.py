@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 import time
 
 import jax
@@ -98,6 +99,16 @@ def main() -> None:
             wrapped, ckpt, lambda s: iter(_gen(corpus, s)),
             save_every=args.save_every,
             on_event=lambda kind, info: print(f"[{kind}] {info}"))
+
+        # SIGTERM (scheduler preemption) / SIGINT (ctrl-C) -> checkpoint at
+        # the next step boundary and exit cleanly instead of dying mid-step.
+        def _on_signal(signum, frame):
+            print(f"[signal] {signal.Signals(signum).name}: preempting at "
+                  "next step boundary")
+            runner.request_preemption()
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, _on_signal)
 
         t0 = time.time()
         state, end = runner.run(state, start, args.steps)

@@ -1,3 +1,4 @@
-"""Production runtime: checkpoint/restart, failure handling, and the paper's
-compression technique applied where a 1000-node deployment bleeds bytes —
-gradient all-reduce, KV cache, and checkpoint storage (DESIGN.md §2)."""
+"""Production runtime: checkpoint/restart, failure handling, the durable
+archive container (archive_io) + fault-injection harness (faultinject), and
+the paper's compression technique applied where a 1000-node deployment bleeds
+bytes — gradient all-reduce, KV cache, and checkpoint storage (DESIGN.md §2)."""

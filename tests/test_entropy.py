@@ -1,10 +1,10 @@
 """Huffman / index-set / quantization bitstream tests (incl. hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_fallback import given, settings, st
 
 from repro.core import entropy
+from repro.core.errors import MalformedStream, TruncatedArchive
 from repro.core.quantization import dequantize, quantize, quantization_error_bound
 import jax.numpy as jnp
 
@@ -64,6 +64,68 @@ def test_quantization_error_within_half_bin(bin_size, values):
     deq = dequantize(quantize(x, bin_size), bin_size)
     err = np.abs(np.asarray(deq) - np.asarray(x))
     assert np.all(err <= bin_size / 2 + 1e-5 * bin_size + 1e-6)
+
+
+def test_huffman_truncated_payload_raises_typed():
+    vals = np.arange(-100, 100, dtype=np.int64).repeat(20)
+    stream = entropy.huffman_compress(vals)
+    cut = entropy.HuffmanStream(stream.payload[:len(stream.payload) // 4],
+                                stream.book, stream.count)
+    with pytest.raises((TruncatedArchive, MalformedStream)):
+        entropy.huffman_decompress(cut)
+
+
+def test_huffman_rebuild_book_rejects_bad_lengths():
+    with pytest.raises(MalformedStream):
+        entropy.rebuild_book(np.array([1, 2], np.int64),
+                             np.array([0, 3], np.uint8))      # length 0
+    with pytest.raises(MalformedStream):
+        entropy.rebuild_book(np.array([1, 2], np.int64),
+                             np.array([17, 17], np.uint8))    # > MAX_CODE_LEN
+    with pytest.raises(MalformedStream):
+        entropy.rebuild_book(np.array([1, 2], np.int64),
+                             np.array([3, 2], np.uint8))      # not canonical
+    with pytest.raises(MalformedStream):
+        entropy.rebuild_book(np.array([1, 2, 3], np.int64),
+                             np.array([1, 1, 1], np.uint8))   # Kraft violation
+    with pytest.raises(MalformedStream):
+        entropy.rebuild_book(np.array([1], np.int64),
+                             np.array([1, 1], np.uint8))      # size mismatch
+
+
+def test_huffman_rebuild_book_roundtrip():
+    vals = np.round(np.random.default_rng(3).standard_normal(4000) * 5
+                    ).astype(np.int64)
+    stream = entropy.huffman_compress(vals)
+    book2 = entropy.rebuild_book(stream.book.symbols, stream.book.lengths)
+    np.testing.assert_array_equal(book2.codes, stream.book.codes)
+    np.testing.assert_array_equal(
+        entropy.huffman_decode(stream.payload, book2, stream.count), vals)
+
+
+def test_index_sets_garbage_raises_typed():
+    with pytest.raises(MalformedStream):
+        entropy.decode_index_sets(b"definitely not deflate")
+    # valid deflate, garbage header inside
+    import zlib as _z
+    with pytest.raises((MalformedStream, TruncatedArchive)):
+        entropy.decode_index_sets(_z.compress(b"\x01"))
+
+
+def test_index_sets_cross_checks():
+    sets = [np.array([0, 3], np.int32), np.array([1], np.int32)]
+    blob = entropy.encode_index_sets(sets, 8)
+    with pytest.raises(MalformedStream):
+        entropy.decode_index_sets(blob, expect_dim=16)
+    with pytest.raises(MalformedStream):
+        entropy.decode_index_sets(blob, expect_sets=3)
+    out = entropy.decode_index_sets(blob, expect_dim=8, expect_sets=2)
+    np.testing.assert_array_equal(out[0], sets[0])
+
+
+def test_zlib_unpack_garbage_raises_typed():
+    with pytest.raises(MalformedStream):
+        entropy.zlib_unpack(b"\x00\x01\x02")
 
 
 def test_quantization_l2_bound_formula():

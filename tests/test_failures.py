@@ -1,0 +1,110 @@
+"""ResilientRunner edge cases: retry-budget exhaustion, anomaly rollback,
+cold-restore fallback, and the preemption hook."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.failures import (ResilientRunner, SimulatedDeviceFailure,
+                                    chaos_wrap)
+
+
+def _data_iter(start):
+    def gen():
+        s = start
+        while True:
+            yield {"i": s}
+            s += 1
+    return iter(gen())
+
+
+def _counting_step(state, batch):
+    return state + 1, {"loss": jnp.asarray(0.5)}
+
+
+def test_retry_budget_exhaustion_reraises(tmp_path):
+    """A persistent fault must not loop forever: after max_retries the
+    original exception propagates to the caller."""
+    def always_fails(state, batch):
+        raise SimulatedDeviceFailure("node is gone for good")
+
+    events = []
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(always_fails, mgr, _data_iter, max_retries=2,
+                             on_event=lambda k, info: events.append((k, info)))
+    with pytest.raises(SimulatedDeviceFailure):
+        runner.run(jnp.zeros(()), 0, 5)
+    failures = [info for k, info in events if k == "failure"]
+    assert len(failures) == 3                      # max_retries + final raise
+    assert failures[-1]["retry"] == 3
+
+
+def test_anomaly_restore_policy_rolls_back(tmp_path):
+    """anomaly_policy='restore': a loss spike rolls the state back to the
+    newest checkpoint instead of skipping the batch."""
+    spiked = {"done": False}
+
+    def step_fn(state, batch):
+        loss = 0.5
+        if int(batch["i"]) == 3 and not spiked["done"]:
+            spiked["done"] = True
+            loss = float("nan")
+        return state + 1, {"loss": jnp.asarray(loss)}
+
+    events = []
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(step_fn, mgr, _data_iter, save_every=2,
+                             anomaly_policy="restore",
+                             on_event=lambda k, info: events.append((k, info)))
+    state, end = runner.run(jnp.zeros(()), 0, 6)
+    assert end == 6
+    assert runner.stats.restores == 1
+    assert runner.stats.skipped_batches == 0
+    anomalies = [info for k, info in events if k == "anomaly"]
+    restores = [info for k, info in events if k == "restore"]
+    assert len(anomalies) == 1 and anomalies[0]["step"] == 3
+    assert restores == [{"step": 2}]               # rolled back to save_every=2
+    # state advanced exactly once per *kept* step after the rollback
+    assert int(state) == 6
+
+
+def test_cold_restore_fallback_without_checkpoint(tmp_path):
+    """Crash before any checkpoint exists: runner falls back to the caller's
+    initial state at step 0 (cold restore) and still completes."""
+    events = []
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(chaos_wrap(_counting_step, {1}), mgr, _data_iter,
+                             save_every=100, max_retries=3,
+                             on_event=lambda k, info: events.append((k, info)))
+    state, end = runner.run(jnp.zeros(()), 0, 4)
+    assert end == 4
+    restores = [info for k, info in events if k == "restore"]
+    assert restores == [{"step": 0, "cold": True}]
+    assert runner.stats.restores == 1
+    # cold fallback keeps the in-memory state at crash time (best effort), so
+    # the surviving pre-crash step is applied once more on replay: 1 + 4
+    assert int(state) == 5
+
+
+def test_preemption_checkpoints_and_stops(tmp_path):
+    """request_preemption() (the SIGTERM hook) stops at the next boundary and
+    leaves a blocking checkpoint behind."""
+    runner_box = {}
+
+    def step_fn(state, batch):
+        if int(batch["i"]) == 2:
+            runner_box["r"].request_preemption()
+        return state + 1, {"loss": jnp.asarray(0.5)}
+
+    events = []
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(step_fn, mgr, _data_iter, save_every=100,
+                             on_event=lambda k, info: events.append((k, info)))
+    runner_box["r"] = runner
+    state, end = runner.run(jnp.zeros(()), 0, 10)
+    assert end == 3                                # stopped early, not at 10
+    assert ("preempted", {"step": 3}) in events
+    assert mgr.latest_step() == 3
+    step, back = mgr.restore()
+    assert step == 3 and int(back) == 3

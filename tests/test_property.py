@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_fallback import given, settings, st
 
 from repro.core import entropy, gae
 from repro.core.quantization import (dequantize, quantization_error_bound,
