@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 smoke gate: unit tests, an end-to-end compress -> container ->
-# verify run, and a seeded corruption-fuzz pass over the written archive.
+# Tier-1 smoke gate: hot-path lint, unit tests, an end-to-end compress ->
+# container -> verify run, a seeded corruption-fuzz pass over the written
+# archive, and the throughput benchmark's retrace-regression gate.
 # Everything here must stay green; run before merging.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -8,15 +9,32 @@ export PYTHONPATH=src
 
 OUT="${TMPDIR:-/tmp}/smoke_archive.rba"
 
-echo "== 1/3 unit tests =="
+echo "== 1/5 hot-path jit lint =="
+# Inline jax.jit() wrappers in core hot paths discard the trace cache and
+# retrace per call — all jitted programs must go through core/exec.py's
+# persistent cache (see docs/PERF.md).
+if grep -rn 'jax\.jit(' src/repro/core/ --include='*.py' \
+        | grep -v 'core/exec\.py' \
+        | grep -v 'functools\.partial(jax\.jit' \
+        | grep -v '`' | grep -v '^[^:]*:[0-9]*: *#'; then
+    echo "FAIL: inline jax.jit( call site in src/repro/core/ hot path" \
+         "(route it through core/exec.py's JitCache)" >&2
+    exit 1
+fi
+
+echo "== 2/5 unit tests =="
 python -m pytest -x -q
 
-echo "== 2/3 end-to-end compress + container verify =="
+echo "== 3/5 end-to-end compress + container verify =="
 python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
     --epochs-scale 0.25 --chunk-hyperblocks 32 --out "$OUT" --verify
 
-echo "== 3/3 corruption fuzz (seeded) =="
+echo "== 4/5 corruption fuzz (seeded) =="
 python -m repro.runtime.faultinject "$OUT" --trials 64 --seed 0
+
+echo "== 5/5 throughput bench (smoke: retrace gate) =="
+python benchmarks/bench_pipeline_throughput.py --smoke \
+    --out "${TMPDIR:-/tmp}/BENCH_pipeline_smoke.json"
 
 rm -f "$OUT"
 echo "smoke OK"

@@ -1,6 +1,7 @@
 """The paper's contribution: attention-based hierarchical compression with
 guaranteed error bounds (HBAE + BAE + GAE + bitstream)."""
 from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,  # noqa: F401
-                               DamageReport, MalformedStream, TruncatedArchive)
+                               DamageReport, GuaranteeUnsatisfiable,
+                               MalformedStream, TruncatedArchive)
 from repro.core.pipeline import (Archive, ArchiveChunk, CompressorConfig,  # noqa: F401
                                  HierarchicalCompressor)

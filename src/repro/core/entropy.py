@@ -22,6 +22,11 @@ from repro.core.errors import MalformedStream, TruncatedArchive
 
 MAX_CODE_LEN = 16
 
+# DEFLATE effort for the index/bin-exp blobs.  Level 9 spent ~40% of chunk
+# encode time for <1% ratio over level 6 on the bitmask payloads (measured in
+# BENCH_pipeline.json); 6 is the hot-path sweet spot.
+_ZLIB_LEVEL = 6
+
 
 # ---------------------------------------------------------------------------
 # canonical Huffman
@@ -146,18 +151,15 @@ def rebuild_book(symbols: np.ndarray, lengths: np.ndarray) -> HuffmanBook:
                        codes=rebuild_canonical_codes(lengths))
 
 
-def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
-    """Table-driven decode (2^16 lookup), bounds-checked against corrupt input:
-    an undecodable prefix raises ``MalformedStream`` and running out of payload
-    bits before ``count`` symbols raises ``TruncatedArchive``."""
-    if count == 0:
-        return np.zeros(0, np.int64)
-    if count < 0:
-        raise MalformedStream(f"negative symbol count {count}")
-    if book.symbols.size == 0:
-        raise MalformedStream("empty Huffman book with nonzero symbol count")
+# Below this symbol count the fully-vectorized decode's setup cost exceeds
+# the scalar loop; measured crossover is a few hundred symbols.
+_VECTOR_DECODE_MIN = 256
+
+
+def _decode_table(book: HuffmanBook) -> tuple[np.ndarray, np.ndarray]:
+    """(table_sym, table_len) 2^16 lookup tables; table_len 0 = invalid."""
     table_sym = np.zeros(1 << MAX_CODE_LEN, np.int64)
-    table_len = np.zeros(1 << MAX_CODE_LEN, np.uint8)   # 0 = invalid prefix
+    table_len = np.zeros(1 << MAX_CODE_LEN, np.uint8)
     for s, l, c in zip(book.symbols, book.lengths, book.codes):
         l = int(l)
         if not 1 <= l <= MAX_CODE_LEN:
@@ -168,9 +170,27 @@ def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
             raise MalformedStream("Huffman code outside table range")
         table_sym[base:base + span] = s
         table_len[base:base + span] = l
-    total_bits = len(data) * 8
+    return table_sym, table_len
+
+
+def _decode_prologue(data: bytes, book: HuffmanBook, count: int):
+    if count < 0:
+        raise MalformedStream(f"negative symbol count {count}")
+    if book.symbols.size == 0:
+        raise MalformedStream("empty Huffman book with nonzero symbol count")
+    table_sym, table_len = _decode_table(book)
     bits = np.unpackbits(np.frombuffer(data, np.uint8))
     bits = np.concatenate([bits, np.zeros(MAX_CODE_LEN, np.uint8)])  # tail pad
+    return table_sym, table_len, bits, len(data) * 8
+
+
+def huffman_decode_scalar(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
+    """Reference table-driven decode: one Python iteration per symbol.  Kept
+    as the oracle for the vectorized path (and for small streams, where it is
+    faster); identical output and error behavior."""
+    if count == 0:
+        return np.zeros(0, np.int64)
+    table_sym, table_len, bits, total_bits = _decode_prologue(data, book, count)
     out = np.empty(count, np.int64)
     pos = 0
     weights = (1 << np.arange(MAX_CODE_LEN - 1, -1, -1)).astype(np.int64)
@@ -185,6 +205,70 @@ def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
         out[i] = table_sym[w]
         pos += step
     return out
+
+
+def huffman_decode(data: bytes, book: HuffmanBook, count: int) -> np.ndarray:
+    """Table-driven decode (2^16 lookup), bounds-checked against corrupt input:
+    an undecodable prefix raises ``MalformedStream`` and running out of payload
+    bits before ``count`` symbols raises ``TruncatedArchive``.
+
+    Large streams take a vectorized path: every bit position's (symbol, step)
+    is computed in one numpy pass, then the decode chain pos -> pos + step is
+    enumerated by pointer doubling — O(total_bits * log(count)) numpy work
+    with no per-symbol Python iteration, and GIL-releasing so independent
+    chunks decode in parallel (see ``core.exec.map_parallel``).  Output and
+    typed-error behavior are identical to ``huffman_decode_scalar`` (the
+    chain is deterministic up to the first damaged position, which is
+    reported exactly as the scalar loop would).
+    """
+    if count == 0:
+        return np.zeros(0, np.int64)
+    if count < _VECTOR_DECODE_MIN:
+        return huffman_decode_scalar(data, book, count)
+    if book.symbols.size == 0:
+        raise MalformedStream("empty Huffman book with nonzero symbol count")
+    table_sym, table_len = _decode_table(book)
+    total_bits = len(data) * 8
+
+    # The 16-bit window at EVERY bit position 0..total_bits, read straight
+    # out of zero-padded byte triples: window(p) spans bytes p>>3 .. p>>3+2,
+    # so one gather + two shifts beats both unpackbits and a 16-pass build.
+    buf = np.frombuffer(data, np.uint8).astype(np.uint32)
+    ext = np.concatenate([buf, np.zeros(3, np.uint32)])
+    b3 = (ext[:-2] << 16) | (ext[1:-1] << 8) | ext[2:]
+    n_pos = total_bits + 1
+    pos_all = np.arange(n_pos, dtype=np.int64)
+    windows = ((b3[pos_all >> 3] << (pos_all & 7)) >> 8) & 0xFFFF
+    step = table_len[windows]                          # uint8; 0 = invalid
+
+    # Successor of each position; invalid prefixes (step 0) self-loop and
+    # overruns clamp in-range so the doubling below stays well-defined — the
+    # post-scan reports the first error in chain order.
+    idx = np.arange(n_pos, dtype=np.int32)
+    nxt = np.minimum(np.where(step == 0, idx, idx + step),
+                     np.int32(n_pos - 1))
+
+    # Pointer doubling: after k rounds ``pos`` holds the bit positions of the
+    # first 2^k symbols in order and ``jump`` advances 2^k symbols at once.
+    pos = np.zeros(1, np.int32)
+    jump = nxt
+    while pos.size < count:
+        pos = np.concatenate([pos, jump[pos]])
+        if pos.size < count:
+            jump = jump[jump]
+    pos = pos[:count]
+
+    step_v = step[pos]
+    bad = step_v == 0
+    trunc = pos.astype(np.int64) + step_v > total_bits
+    if bad.any() or trunc.any():
+        first = int(np.argmax(bad | trunc))
+        if bad[first]:
+            raise MalformedStream(
+                f"undecodable Huffman prefix at bit {int(pos[first])}")
+        raise TruncatedArchive(
+            f"Huffman payload exhausted at symbol {first}/{count}")
+    return table_sym[windows[pos]]
 
 
 class HuffmanStream(NamedTuple):
@@ -220,23 +304,34 @@ def huffman_size_bits(values: np.ndarray) -> int:
 
 def encode_index_sets(index_sets: list[np.ndarray], dim: int) -> bytes:
     """'1' marks a selected basis vector; store only the shortest prefix that
-    contains all 1s, plus its length; concatenate and DEFLATE."""
-    lengths = []
-    all_bits = []
-    for idx in index_sets:
-        mask = np.zeros(dim, np.uint8)
-        if idx.size:
-            mask[idx] = 1
-            plen = int(idx.max()) + 1
-        else:
-            plen = 0
-        lengths.append(plen)
-        all_bits.append(mask[:plen])
-    bits = np.concatenate(all_bits) if all_bits else np.zeros(0, np.uint8)
-    header = struct.pack("<II", len(index_sets), dim)
-    lens_b = np.asarray(lengths, np.uint32).tobytes()
+    contains all 1s, plus its length; concatenate and DEFLATE.
+
+    Whole-batch implementation (one scatter into an (n, dim) mask matrix, one
+    boolean prefix-select) — the per-set Python loop this replaces dominated
+    chunk encode time at production block counts.
+    """
+    n = len(index_sets)
+    sizes = np.fromiter((np.asarray(s).size for s in index_sets), np.int64, n)
+    total = int(sizes.sum())
+    plen = np.zeros(n, np.int64)
+    if total:
+        rows = np.repeat(np.arange(n), sizes)
+        cols = np.concatenate([np.asarray(s, np.int64).ravel()
+                               for s in index_sets])
+        masks = np.zeros((n, dim), np.uint8)
+        masks[rows, cols] = 1
+        # per-set max index + 1; consecutive nonempty starts bound exactly
+        # the nonempty segments (empty segments collapse to zero width)
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        nz = sizes > 0
+        plen[nz] = np.maximum.reduceat(cols, starts[nz]) + 1
+        bits = masks[np.arange(dim)[None, :] < plen[:, None]]
+    else:
+        bits = np.zeros(0, np.uint8)
+    header = struct.pack("<II", n, dim)
+    lens_b = plen.astype(np.uint32).tobytes()
     payload = np.packbits(bits).tobytes() if bits.size else b""
-    return zlib.compress(header + lens_b + payload, level=9)
+    return zlib.compress(header + lens_b + payload, level=_ZLIB_LEVEL)
 
 
 def decode_index_sets(blob: bytes, expect_dim: Optional[int] = None,
@@ -269,17 +364,19 @@ def decode_index_sets(blob: bytes, expect_dim: Optional[int] = None,
     bits = np.unpackbits(np.frombuffer(raw[8 + 4 * n:], np.uint8))
     if int(lens.sum()) > bits.size:
         raise TruncatedArchive("index bitmask payload truncated")
-    out = []
-    pos = 0
-    for plen in lens:
-        mask = bits[pos:pos + plen]
-        out.append(np.nonzero(mask)[0].astype(np.int32))
-        pos += int(plen)
-    return out
+    # one flatnonzero over the concatenated prefixes, then per-set views via
+    # searchsorted cuts — no per-set Python nonzero on the hot decode path
+    offs = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=offs[1:])
+    nzpos = np.flatnonzero(bits[:offs[-1]])
+    seg = np.searchsorted(offs, nzpos, side="right") - 1
+    local = (nzpos - offs[seg]).astype(np.int32)
+    cuts = np.searchsorted(nzpos, offs)
+    return [local[cuts[i]:cuts[i + 1]] for i in range(n)]
 
 
 def zlib_pack(data: bytes) -> bytes:
-    return zlib.compress(data, level=9)
+    return zlib.compress(data, level=_ZLIB_LEVEL)
 
 
 def zlib_unpack(data: bytes) -> bytes:

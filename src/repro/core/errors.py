@@ -29,6 +29,27 @@ class MalformedStream(ArchiveError):
     out-of-range indices, count mismatches, undecodable prefix, ...)."""
 
 
+class GuaranteeUnsatisfiable(Exception):
+    """The GAE encoder could not bring a block's l2 error under ``tau``.
+
+    Raised on the ENCODE side (not an ``ArchiveError``): it means the
+    verify-and-repair loop exhausted its refinement budget with ``err > tau``
+    — e.g. a rank-deficient basis that cannot span the residual, or a
+    ``max_refine`` cap too small for the requested bound.  Before this error
+    existed the encoder silently emitted a guarantee-violating block.
+    """
+
+    def __init__(self, block: int, err: float, tau: float, max_refine: int):
+        self.block = int(block)
+        self.err = float(err)
+        self.tau = float(tau)
+        self.max_refine = int(max_refine)
+        super().__init__(
+            f"GAE block {block}: residual l2 {err:.6g} > tau {tau:.6g} after "
+            f"exhausting max_refine={max_refine} bin refinements — the "
+            f"guarantee cannot be honored for this block")
+
+
 @dataclasses.dataclass
 class ChunkDamage:
     """One damaged hyper-block stripe of an archive."""

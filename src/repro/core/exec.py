@@ -1,0 +1,316 @@
+"""Persistent execution layer for the compression hot path.
+
+Before this layer existed every call site in ``core.pipeline`` did
+``jax.jit(fn)(args)`` inline: a *fresh* jit wrapper per call, which discards
+jax's compilation cache and retraces + recompiles the model on every
+``compress``/``decompress``.  This module owns three things instead:
+
+1. **A persistent jitted-function cache** (``cache()``): one long-lived
+   ``jax.jit`` wrapper per (name, static-args) key.  Under each wrapper jax's
+   own trace cache keys on (params pytree structure, shape, dtype), so a
+   repeated call with same-shaped inputs never retraces.  Every *actual*
+   trace is counted (``retrace_counts()``) by a Python side effect that only
+   runs at trace time — the regression gate in ``scripts/smoke.sh`` asserts
+   the count stays 0 across repeated calls after warmup.
+
+2. **Fused device-resident stage programs**: ``encode_frontend`` fuses
+   HBAE-encode -> quantize -> dequantize -> HBAE-decode -> per-stage
+   BAE-encode/quantize/decode/residual-update into ONE program, and
+   ``decode_backend`` fuses dequantize -> HBAE/BAE decode -> residual sum
+   into one program.  ``run_compress_stage`` chains them with the quantized
+   latents staying on device, so a full compress front-end is one
+   host->device transfer and one device->host transfer instead of the ~8
+   ``np.asarray``/``jnp.asarray`` bounces of the old path.  Compress and
+   decompress both obtain the AE reconstruction from the *same*
+   ``decode_backend`` program, so the reconstruction the GAE guarantee was
+   verified against is exactly the one the decoder reproduces.
+
+3. **A shared worker pool** (``map_parallel``) for the chunk-striped entropy
+   coders: archive chunks are independently codable by design (see
+   docs/ARCHIVE_FORMAT.md), and the Huffman/index-set work is numpy/zlib
+   dominated (GIL-releasing), so a thread pool scales the host-side loops.
+
+Stage-level timing/throughput counters (``stage`` / ``stage_stats``) wrap
+each hot-path phase; ``launch/compress.py`` prints them and
+``benchmarks/bench_pipeline_throughput.py`` records them into
+``BENCH_pipeline.json``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bae as bae_mod
+from repro.core import hbae as hbae_mod
+from repro.core.quantization import dequantize, quantize
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# persistent jit cache with retrace accounting
+# ---------------------------------------------------------------------------
+
+class JitCache:
+    """One persistent ``jax.jit`` wrapper per (name, statics) key.
+
+    The wrapper body increments a per-name retrace counter — the body only
+    executes while jax is *tracing*, so the counter counts actual retraces
+    (shape/dtype/structure changes), not calls.
+    """
+
+    def __init__(self):
+        self._fns: dict = {}
+        self._retraces: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def get(self, name: str, fn: Callable, *,
+            static_argnums: Sequence[int] = (),
+            static_argnames: Sequence[str] = ()) -> Callable:
+        key = (name, tuple(static_argnums), tuple(static_argnames))
+        with self._lock:
+            cached = self._fns.get(key)
+            if cached is None:
+                def counted(*args, __fn=fn, __name=name, **kwargs):
+                    self.count_retrace(__name)
+                    return __fn(*args, **kwargs)
+                cached = jax.jit(counted, static_argnums=static_argnums,
+                                 static_argnames=static_argnames)
+                self._fns[key] = cached
+        return cached
+
+    def count_retrace(self, name: str) -> None:
+        with self._lock:
+            self._retraces[name] = self._retraces.get(name, 0) + 1
+
+    def retrace_counts(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._retraces)
+
+    def total_retraces(self) -> int:
+        with self._lock:
+            return sum(self._retraces.values())
+
+
+_CACHE = JitCache()
+
+
+def cache() -> JitCache:
+    return _CACHE
+
+
+def retrace_counts() -> dict[str, int]:
+    return _CACHE.retrace_counts()
+
+
+def total_retraces() -> int:
+    return _CACHE.total_retraces()
+
+
+# ---------------------------------------------------------------------------
+# stage timing / throughput counters
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageStat:
+    calls: int = 0
+    seconds: float = 0.0
+    values: int = 0
+
+    def values_per_s(self) -> float:
+        return self.values / self.seconds if self.seconds > 0 else 0.0
+
+
+_STAGES: dict[str, StageStat] = {}
+_STAGE_LOCK = threading.Lock()
+
+
+@contextlib.contextmanager
+def stage(name: str, n_values: int = 0):
+    """Time one hot-path stage; accumulates wall time + processed values."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        dt = time.perf_counter() - t0
+        with _STAGE_LOCK:
+            st = _STAGES.setdefault(name, StageStat())
+            st.calls += 1
+            st.seconds += dt
+            st.values += int(n_values)
+
+
+def stage_stats() -> dict[str, StageStat]:
+    with _STAGE_LOCK:
+        return {k: dataclasses.replace(v) for k, v in _STAGES.items()}
+
+
+def reset_stage_stats() -> None:
+    with _STAGE_LOCK:
+        _STAGES.clear()
+
+
+def stats_summary() -> str:
+    """Human-readable per-stage throughput + retrace report."""
+    lines = []
+    for name, st in sorted(stage_stats().items()):
+        lines.append(f"{name}: {st.calls} calls, {st.seconds:.3f}s, "
+                     f"{st.values_per_s() / 1e6:.2f} Mvalues/s")
+    traces = retrace_counts()
+    if traces:
+        total = sum(traces.values())
+        parts = ", ".join(f"{k}={v}" for k, v in sorted(traces.items()))
+        lines.append(f"traces: {total} ({parts})")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# shared worker pool for chunk-parallel entropy coding
+# ---------------------------------------------------------------------------
+
+_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_LOCK = threading.Lock()
+
+
+def codec_workers() -> int:
+    """Worker count for chunk-parallel entropy coding (env-overridable;
+    ``REPRO_CODEC_WORKERS=1`` forces the serial path)."""
+    env = os.environ.get("REPRO_CODEC_WORKERS", "")
+    if env.strip():
+        try:
+            return max(1, int(env))
+        except ValueError:
+            pass
+    return max(1, min(32, os.cpu_count() or 1))
+
+
+def _pool() -> ThreadPoolExecutor:
+    global _POOL
+    with _POOL_LOCK:
+        if _POOL is None:
+            _POOL = ThreadPoolExecutor(max_workers=codec_workers(),
+                                       thread_name_prefix="repro-codec")
+        return _POOL
+
+
+def map_parallel(fn: Callable, items: Iterable) -> list:
+    """``[fn(x) for x in items]`` across the shared pool, order-preserving.
+
+    Falls back to the serial loop for <=1 items or a 1-worker configuration
+    so behavior stays bit-identical and easy to force in tests.
+    """
+    items = list(items)
+    if len(items) <= 1 or codec_workers() <= 1:
+        return [fn(x) for x in items]
+    return list(_pool().map(fn, items))
+
+
+# ---------------------------------------------------------------------------
+# fused device-resident stage programs
+# ---------------------------------------------------------------------------
+
+def _encode_frontend(hbae_params: dict, bae_params: list, x: Array,
+                     hb_bin: float, bae_bin: float):
+    """x -> (q_lh, [q_lb per stage]); the full quantized-latent front-end as
+    one device program.  Residual chaining requires the intermediate decoded
+    reconstruction, so the decode work happens here too — but the
+    reconstruction handed to callers always comes from ``decode_backend`` so
+    encode/decode agree bit-exactly."""
+    latent = hbae_mod.hbae_encode(hbae_params, x)
+    q_lh = quantize(latent, hb_bin)
+    recon = hbae_mod.hbae_decode(hbae_params, dequantize(q_lh, hb_bin))
+    q_lbs = []
+    if bae_params:
+        n, k, d = x.shape
+        resid = (x - recon).reshape(n * k, d)
+        for p in bae_params:
+            lb = bae_mod.bae_encode(p, resid)
+            q_lb = quantize(lb, bae_bin)
+            r_hat = bae_mod.bae_decode(p, dequantize(q_lb, bae_bin))
+            recon = recon + r_hat.reshape(n, k, d)
+            resid = resid - r_hat
+            q_lbs.append(q_lb)
+    return q_lh, q_lbs
+
+
+def _decode_backend(hbae_params: dict, bae_params: list, q_lh: Array,
+                    q_lbs: list, hb_bin: float, bae_bin: float) -> Array:
+    """(q_lh, [q_lb]) -> reconstruction, as one device program."""
+    recon = hbae_mod.hbae_decode(hbae_params, dequantize(q_lh, hb_bin))
+    for p, q_lb in zip(bae_params, q_lbs):
+        r_hat = bae_mod.bae_decode(p, dequantize(q_lb, bae_bin))
+        recon = recon + r_hat.reshape(recon.shape)
+    return recon
+
+
+def _recon_frontend(hbae_params: dict, bae_params: list, x: Array) -> Array:
+    """AE reconstruction WITHOUT latent quantization (ablation path)."""
+    y, _ = hbae_mod.hbae_apply(hbae_params, x)
+    recon = y
+    if bae_params:
+        n, k, d = x.shape
+        resid = (x - y).reshape(n * k, d)
+        for p in bae_params:
+            r_hat, _ = bae_mod.bae_apply(p, resid)
+            recon = recon + r_hat.reshape(n, k, d)
+            resid = resid - r_hat
+    return recon
+
+
+def _as_q32(q: np.ndarray) -> np.ndarray:
+    """Entropy-decoded latents arrive int64; the device programs trace on the
+    int32 the quantizer emits — cast host-side so the trace cache hits."""
+    q = np.asarray(q)
+    return q.astype(np.int32) if q.dtype != np.int32 else q
+
+
+def run_compress_stage(hbae_params: dict, bae_params: list,
+                       hyperblocks: np.ndarray, hb_bin: float, bae_bin: float
+                       ) -> tuple[np.ndarray, list[np.ndarray], np.ndarray]:
+    """Full device-resident compress front-end: one upload, two fused
+    programs (latents stay on device between them), one download.
+
+    Returns numpy ``(q_lh, [q_lb per stage], recon)``; ``recon`` is computed
+    by the same ``decode_backend`` program ``run_decompress_stage`` uses, so
+    the GAE encoder corrects exactly what the decoder will reproduce.
+    """
+    enc = _CACHE.get("encode_frontend", _encode_frontend)
+    dec = _CACHE.get("decode_backend", _decode_backend)
+    x = jnp.asarray(hyperblocks)
+    q_lh, q_lbs = enc(hbae_params, bae_params, x, hb_bin, bae_bin)
+    recon = dec(hbae_params, bae_params, q_lh, q_lbs, hb_bin, bae_bin)
+    q_lh, q_lbs, recon = jax.device_get((q_lh, q_lbs, recon))
+    return np.asarray(q_lh), [np.asarray(q) for q in q_lbs], np.asarray(recon)
+
+
+def run_decompress_stage(hbae_params: dict, bae_params: list,
+                         q_lh: np.ndarray, q_lbs: list, hb_bin: float,
+                         bae_bin: float) -> np.ndarray:
+    """Fused dequantize+decode back-end: one upload, one program, one
+    download."""
+    dec = _CACHE.get("decode_backend", _decode_backend)
+    dq_lh = jnp.asarray(_as_q32(q_lh))
+    dq_lbs = [jnp.asarray(_as_q32(q)) for q in q_lbs]
+    recon = np.asarray(jax.device_get(
+        dec(hbae_params, bae_params, dq_lh, dq_lbs, hb_bin, bae_bin)))
+    # device_get hands back a read-only view; callers (GAE correction)
+    # write into the reconstruction in place.
+    return recon if recon.flags.writeable else recon.copy()
+
+
+def run_recon_stage(hbae_params: dict, bae_params: list,
+                    hyperblocks: np.ndarray) -> np.ndarray:
+    """Unquantized AE reconstruction (``reconstruct_ae(quantize_latents=
+    False)``)."""
+    fn = _CACHE.get("recon_frontend", _recon_frontend)
+    return np.asarray(jax.device_get(
+        fn(hbae_params, bae_params, jnp.asarray(hyperblocks))))

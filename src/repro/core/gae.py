@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import GuaranteeUnsatisfiable
 from repro.core.quantization import dequantize, quantize
 
 Array = jax.Array
@@ -119,6 +120,41 @@ def gae_apply(x: Array, x_r: Array, basis: Array, tau: float, bin_size: float,
     return x_r + sel.corrected, sel
 
 
+def select_host(residuals: np.ndarray, basis: np.ndarray, tau: float,
+                bin_size: float) -> GAESelection:
+    """Numpy twin of ``gae_select`` for the host-side encoder on the CPU
+    backend, where XLA's row sorts run far slower than numpy's.  Same math,
+    same rounding (round-half-to-even, float32 dequantize), same fields —
+    equivalence is pinned by tests against ``gae_select``."""
+    r = np.asarray(residuals, np.float32)
+    u = np.asarray(basis, np.float32)
+    d = r.shape[-1]
+    c = r @ u
+    c2 = np.square(c)
+    order = np.argsort(-c2, axis=-1)
+    c_sorted = np.take_along_axis(c, order, axis=-1)
+    c2_sorted = np.take_along_axis(c2, order, axis=-1)
+    q_sorted = np.round(c_sorted / bin_size).astype(np.int32)
+    deq = q_sorted.astype(np.float32) * np.float32(bin_size)
+    qerr2 = np.square(c_sorted - deq)
+    total = c2_sorted.sum(axis=-1, keepdims=True)
+    tail2 = total - np.cumsum(c2_sorted, axis=-1)
+    kept2 = np.cumsum(qerr2, axis=-1)
+    err2 = np.concatenate([total, tail2 + kept2], axis=-1)
+    ok_any = err2 <= tau * tau
+    m = np.argmax(ok_any, axis=-1)
+    ok = ok_any.any(axis=-1)
+    m = np.where(ok, m, d)
+    keep = np.arange(d)[None, :] < m[:, None]
+    c_hat = np.zeros_like(deq)
+    np.put_along_axis(c_hat, order, np.where(keep, deq, np.float32(0.0)),
+                      axis=-1)
+    corrected = c_hat @ u.T
+    err = np.linalg.norm(r - corrected, axis=-1)
+    return GAESelection(m=m, order=order, q_sorted=q_sorted,
+                        corrected=corrected, err=err, ok=ok)
+
+
 # ---------------------------------------------------------------------------
 # literal Algorithm 1 (oracle; host-side, per block)
 # ---------------------------------------------------------------------------
@@ -159,7 +195,7 @@ def gae_reference_loop(x: np.ndarray, x_r: np.ndarray, basis: np.ndarray,
 
 class GAEBlockCode(NamedTuple):
     m: int                  # number of kept coefficients
-    indices: np.ndarray     # (m,) basis indices (int32), magnitude order
+    indices: np.ndarray     # (m,) basis indices (int32), ASCENDING index order
     qcoeffs: np.ndarray     # (m,) quantized ints at bin_size / 2**bin_exp
     bin_exp: int            # per-block bin refinement exponent (usually 0)
 
@@ -172,24 +208,63 @@ def gae_encode_blocks(x: np.ndarray, x_r: np.ndarray, basis: np.ndarray,
     Uses the one-shot vectorized selection, then verifies the realized error per
     block against the *actual* reconstruction (guarding numerical non-
     orthonormality of the eigh basis) and, for any block that cannot meet tau at
-    the global bin size, halves the bin (per-block ``bin_exp``) until it does —
-    always possible since quantization error -> 0.
+    the global bin size, halves the bin (per-block ``bin_exp``) until it does.
+    With a full-rank basis the quantization error goes to 0 under refinement;
+    if the budget is exhausted with ``err > tau`` (rank-deficient basis,
+    ``max_refine`` too small), raises ``GuaranteeUnsatisfiable`` instead of
+    emitting a block that violates the bound the caller would then claim.
+
+    Code construction is vectorized (errors, membership masks and the
+    ascending-index extraction are whole-batch numpy passes); the per-block
+    Python work is only the two slices + namedtuple per code, and the repair
+    loop runs solely for blocks whose verified error still exceeds ``tau``.
     """
+    from repro.core import exec as exec_mod
+
     x = np.asarray(x, np.float32)
     x_r = np.asarray(x_r, np.float32)
     u = np.asarray(basis, np.float32)
     n, d = x.shape
 
-    sel = jax.device_get(gae_select(jnp.asarray(x - x_r), jnp.asarray(u), tau, bin_size))
+    if jax.default_backend() == "cpu":
+        # host twin: numpy row sorts beat XLA CPU's by a wide margin, and the
+        # encoder is host-side anyway (see select_host)
+        sel = select_host(x - x_r, u, tau, bin_size)
+    else:
+        select = exec_mod.cache().get("gae_select", gae_select,
+                                      static_argnames=("use_kernel",))
+        sel = jax.device_get(select(jnp.asarray(x - x_r), jnp.asarray(u),
+                                    tau, bin_size))
     out = x_r + np.asarray(sel.corrected)
+
+    # batch extraction in ascending index order: scatter the kept-coefficient
+    # membership and quantized values from sorted-magnitude space back to
+    # index space, then one np.nonzero walks every block's set in index order.
+    ms = np.asarray(sel.m, np.int64)
+    order64 = np.asarray(sel.order, np.int64)
+    keep = np.arange(d)[None, :] < ms[:, None]            # sorted-mag space
+    mask = np.zeros((n, d), bool)
+    np.put_along_axis(mask, order64, keep, axis=1)
+    q_idx_space = np.zeros((n, d), np.int32)
+    np.put_along_axis(q_idx_space, order64,
+                      np.asarray(sel.q_sorted, np.int32), axis=1)
+    rows, cols = np.nonzero(mask)                          # row-major: ascending
+    idx_all = cols.astype(np.int32)
+    q_all = q_idx_space[rows, cols].astype(np.int64)
+    bounds = np.zeros(n + 1, np.int64)
+    np.cumsum(mask.sum(axis=1), out=bounds[1:])
+    errs = np.linalg.norm(x - out, axis=1)
+
     codes: list[GAEBlockCode] = []
+    ms_list = ms.tolist()
+    bounds_list = bounds.tolist()
     for i in range(n):
-        m = int(sel.m[i])
+        m = ms_list[i]
         bin_exp = 0
         b = bin_size
-        idx = np.asarray(sel.order[i][:m], np.int32)
-        q = np.asarray(sel.q_sorted[i][:m], np.int64)
-        err = float(np.linalg.norm(x[i] - out[i]))
+        idx = idx_all[bounds_list[i]:bounds_list[i + 1]]
+        q = q_all[bounds_list[i]:bounds_list[i + 1]]
+        err = errs[i]
         # verify & repair (numerical safety + coarse-bin fallback)
         while err > tau and bin_exp < max_refine:
             if m < d:
@@ -199,23 +274,40 @@ def gae_encode_blocks(x: np.ndarray, x_r: np.ndarray, basis: np.ndarray,
                 b = bin_size / (2 ** bin_exp)
             c = u.T @ (x[i] - x_r[i])
             order = np.argsort(-np.square(c))
-            idx = order[:m].astype(np.int32)
+            idx = np.sort(order[:m]).astype(np.int32)
             q = np.round(c[idx] / b).astype(np.int64)
             rec = x_r[i] + u[:, idx] @ (q.astype(np.float32) * b)
             err = float(np.linalg.norm(x[i] - rec))
             out[i] = rec
-        codes.append(GAEBlockCode(m=m, indices=idx, qcoeffs=q, bin_exp=bin_exp))
+        if err > tau:
+            raise GuaranteeUnsatisfiable(block=i, err=err, tau=tau,
+                                         max_refine=max_refine)
+        codes.append(GAEBlockCode(m, idx, q, bin_exp))
     return out, codes
 
 
 def gae_decode_blocks(x_r: np.ndarray, basis: np.ndarray, codes: list[GAEBlockCode],
                       bin_size: float) -> np.ndarray:
-    """Inverse of gae_encode_blocks given the AE reconstruction x^R."""
+    """Inverse of gae_encode_blocks given the AE reconstruction x^R.
+
+    Vectorized: all blocks' dequantized coefficients scatter into one dense
+    (N, D) matrix (index sets are unique per block, so plain fancy-index
+    assignment is exact) and the correction is a single ``@ basis.T`` matmul
+    instead of a per-block Python loop.
+    """
     u = np.asarray(basis, np.float32)
     out = np.asarray(x_r, np.float32).copy()
-    for i, code in enumerate(codes):
-        if code.m == 0:
-            continue
-        b = bin_size / (2 ** code.bin_exp)
-        out[i] = out[i] + u[:, code.indices] @ (code.qcoeffs.astype(np.float32) * b)
+    if not codes:
+        return out
+    ms = np.fromiter((c.m for c in codes), np.int64, len(codes))
+    if not ms.sum():
+        return out
+    rows = np.repeat(np.arange(len(codes)), ms)
+    cols = np.concatenate([c.indices for c in codes]).astype(np.int64)
+    qs = np.concatenate([c.qcoeffs for c in codes]).astype(np.float32)
+    binexps = np.fromiter((c.bin_exp for c in codes), np.int64, len(codes))
+    b_vals = (bin_size / np.exp2(binexps.astype(np.float64)))[rows]
+    coeffs = np.zeros(out.shape, np.float32)
+    coeffs[rows, cols] = qs * b_vals.astype(np.float32)
+    out += coeffs @ u.T
     return out

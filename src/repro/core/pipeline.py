@@ -26,11 +26,11 @@ import numpy as np
 
 from repro.core import bae as bae_mod
 from repro.core import entropy, gae
+from repro.core import exec as exec_mod
 from repro.core import hbae as hbae_mod
 from repro.core import training
 from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,
                                DamageReport, MalformedStream)
-from repro.core.quantization import dequantize, quantize
 
 Array = jax.Array
 
@@ -85,12 +85,22 @@ class Archive:
     gae_dim: int                     # PCA basis dimension (0 = no GAE section)
     chunks: list[Optional[ArchiveChunk]]
     chunk_errors: dict[int, str] = dataclasses.field(default_factory=dict)
+    _size_cache: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def compressed_bytes(self) -> int:
         """Honest on-disk cost: the exact size of the serialized container
-        (magic, section table, digests, framing — everything)."""
-        from repro.runtime import archive_io   # runtime owns the container
-        return len(archive_io.serialize_archive(self))
+        (magic, section table, digests, framing — everything).  Computed from
+        the section framing arithmetic (no full serialize) and cached, so
+        ``compression_ratio`` is O(sections) once instead of O(archive) per
+        query; mutators must call ``invalidate_size_cache``."""
+        if self._size_cache is None:
+            from repro.runtime import archive_io   # runtime owns the container
+            self._size_cache = archive_io.serialized_size(self)
+        return self._size_cache
+
+    def invalidate_size_cache(self) -> None:
+        self._size_cache = None
 
     def compression_ratio(self, include_model_bytes: int = 0) -> float:
         return (self.n_values * 4) / (self.compressed_bytes() + include_model_bytes)
@@ -178,38 +188,32 @@ class HierarchicalCompressor:
                                        batch=max(cfg.batch * 4, 256), lr=cfg.lr,
                                        seed=seed + s, log=log)
                 self.bae_params.append(p)
-                r_hat, _ = jax.jit(bae_mod.bae_apply)(p, jnp.asarray(resid))
+                apply_fn = exec_mod.cache().get("bae_apply", bae_mod.bae_apply)
+                r_hat, _ = apply_fn(p, jnp.asarray(resid))
                 resid = resid - np.asarray(r_hat)
         return self
 
     # -- forward helpers ----------------------------------------------------
+    def _stage_params(self) -> list[dict]:
+        return self.bae_params if self.cfg.use_bae else []
+
     def _hbae_forward(self, hyperblocks: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        y, latent = jax.jit(hbae_mod.hbae_apply)(self.hbae_params, jnp.asarray(hyperblocks))
+        apply_fn = exec_mod.cache().get("hbae_apply", hbae_mod.hbae_apply)
+        y, latent = apply_fn(self.hbae_params, jnp.asarray(hyperblocks))
         return np.asarray(y), np.asarray(latent)
 
     def reconstruct_ae(self, hyperblocks: np.ndarray,
                        quantize_latents: bool = True) -> np.ndarray:
         """AE-only reconstruction (through quantized latents when requested)."""
         cfg = self.cfg
-        n, k, d = hyperblocks.shape
-        latent = np.asarray(jax.jit(hbae_mod.hbae_encode)(self.hbae_params,
-                                                          jnp.asarray(hyperblocks)))
         if quantize_latents:
-            latent = np.asarray(dequantize(quantize(jnp.asarray(latent), cfg.hb_bin),
-                                           cfg.hb_bin))
-        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params, jnp.asarray(latent)))
-        recon = y
-        if cfg.use_bae:
-            resid = (hyperblocks - y).reshape(n * k, d)
-            for p in self.bae_params:
-                lb = np.asarray(jax.jit(bae_mod.bae_encode)(p, jnp.asarray(resid)))
-                if quantize_latents:
-                    lb = np.asarray(dequantize(quantize(jnp.asarray(lb), cfg.bae_bin),
-                                               cfg.bae_bin))
-                r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb)))
-                recon = recon + r_hat.reshape(n, k, d)
-                resid = resid - r_hat
-        return recon
+            # same fused front-end + shared decode program as ``compress``
+            _, _, recon = exec_mod.run_compress_stage(
+                self.hbae_params, self._stage_params(), hyperblocks,
+                cfg.hb_bin, cfg.bae_bin)
+            return recon
+        return exec_mod.run_recon_stage(self.hbae_params, self._stage_params(),
+                                        hyperblocks)
 
     # -- PCA basis -----------------------------------------------------------
     def fit_basis(self, hyperblocks: np.ndarray) -> np.ndarray:
@@ -247,27 +251,13 @@ class HierarchicalCompressor:
         cfg = self.cfg
         n, k, d = hyperblocks.shape
 
-        # 1. hyper-block AE latents (quantized ints -> Huffman)
-        latent = np.asarray(jax.jit(hbae_mod.hbae_encode)(self.hbae_params,
-                                                          jnp.asarray(hyperblocks)))
-        q_lh = np.asarray(quantize(jnp.asarray(latent), cfg.hb_bin))
-        lat_deq = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
-        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params,
-                                                     jnp.asarray(lat_deq)))
-
-        # 2. block-wise residual AE stage(s)
-        recon = y
-        q_lbs: list[np.ndarray] = []     # per stage: (n*k, bae_latent) ints
-        if cfg.use_bae:
-            resid = (hyperblocks - recon).reshape(n * k, d)
-            for p in self.bae_params:
-                lb = np.asarray(jax.jit(bae_mod.bae_encode)(p, jnp.asarray(resid)))
-                q_lb = np.asarray(quantize(jnp.asarray(lb), cfg.bae_bin))
-                q_lbs.append(q_lb)
-                lb_deq = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
-                r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb_deq)))
-                recon = recon + r_hat.reshape(n, k, d)
-                resid = resid - r_hat
+        # 1+2. fused device-resident AE front-end: HBAE + BAE stage latents
+        # (quantized) and the decoder's reconstruction, in two cached jitted
+        # programs with ONE host->device and ONE device->host transfer.
+        with exec_mod.stage("ae_encode", hyperblocks.size):
+            q_lh, q_lbs, recon = exec_mod.run_compress_stage(
+                self.hbae_params, self._stage_params(), hyperblocks,
+                cfg.hb_bin, cfg.bae_bin)
 
         # 3. GAE error-bound post-processing
         codes: list[gae.GAEBlockCode] = []
@@ -275,18 +265,20 @@ class HierarchicalCompressor:
         if tau is not None:
             if self.basis is None:
                 self.fit_basis(hyperblocks)
-            x_gae = self._gae_view(hyperblocks)
-            r_gae = self._gae_view(recon)
-            _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis, tau,
-                                             cfg.gae_bin)
+            with exec_mod.stage("gae_encode", hyperblocks.size):
+                x_gae = self._gae_view(hyperblocks)
+                r_gae = self._gae_view(recon)
+                _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis,
+                                                 tau, cfg.gae_bin)
             gae_dim = int(self.basis.shape[0])
 
-        # 4. stripe everything into independently-decodable chunks
+        # 4. stripe everything into independently-decodable chunks; chunks
+        # are independent by construction, so they entropy-code in parallel.
         width = self._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
         d_gae = cfg.gae_block_elems or cfg.block_elems
         gae_per_hb = (k * d) // d_gae if tau is not None else 0
-        chunks: list[Optional[ArchiveChunk]] = []
-        for start in range(0, n, width):
+
+        def encode_chunk(start: int) -> ArchiveChunk:
             n_hb = min(width, n - start)
             hb_stream = entropy.huffman_compress(q_lh[start:start + n_hb])
             bae_streams = [entropy.huffman_compress(
@@ -295,12 +287,12 @@ class HierarchicalCompressor:
             index_blob = binexp_blob = b""
             if tau is not None:
                 cchunk = codes[start * gae_per_hb:(start + n_hb) * gae_per_hb]
-                # coefficients in ascending-index order (bitmask decode order)
+                # GAEBlockCode stores indices/coefficients in ascending index
+                # order — exactly the bitmask decode order, no per-code sort
                 all_coeffs, index_sets, binexps = [], [], []
                 for c in cchunk:
-                    asc = np.argsort(c.indices)
-                    index_sets.append(np.sort(c.indices))
-                    all_coeffs.append(c.qcoeffs[asc])
+                    index_sets.append(c.indices)
+                    all_coeffs.append(c.qcoeffs)
                     binexps.append(c.bin_exp)
                 coeffs = (np.concatenate(all_coeffs) if all_coeffs else
                           np.zeros(0, np.int64))
@@ -309,10 +301,14 @@ class HierarchicalCompressor:
                 index_blob = entropy.encode_index_sets(index_sets, gae_dim)
                 binexp_blob = entropy.zlib_pack(
                     np.asarray(binexps, np.uint8).tobytes())
-            chunks.append(ArchiveChunk(
+            return ArchiveChunk(
                 hb_start=start, n_hyperblocks=n_hb, hb_stream=hb_stream,
                 bae_streams=bae_streams, gae_coeff_stream=coeff_stream,
-                gae_index_blob=index_blob, gae_binexp_blob=binexp_blob))
+                gae_index_blob=index_blob, gae_binexp_blob=binexp_blob)
+
+        with exec_mod.stage("entropy_encode", hyperblocks.size):
+            chunks: list[Optional[ArchiveChunk]] = exec_mod.map_parallel(
+                encode_chunk, range(0, n, width))
 
         return Archive(n_hyperblocks=n, n_values=hyperblocks.size,
                        chunk_hyperblocks=width, gae_dim=gae_dim, chunks=chunks)
@@ -413,8 +409,23 @@ class HierarchicalCompressor:
         d_gae = cfg.gae_block_elems or d
         gae_per_hb = (k * d) // d_gae if archive.gae_dim else 0
 
+        # Chunks are independently decodable (docs/ARCHIVE_FORMAT.md), so the
+        # entropy fan-out runs on the shared pool; per-chunk errors are
+        # captured and re-raised in chunk order to keep strict-mode behavior
+        # deterministic and identical to the old serial loop.
+        def decode_one(chunk: Optional[ArchiveChunk]):
+            if chunk is None:
+                return None
+            try:
+                return self._decode_chunk(chunk, archive)
+            except ArchiveError as e:
+                return e
+
+        with exec_mod.stage("entropy_decode", archive.n_values):
+            decoded = exec_mod.map_parallel(decode_one, archive.chunks)
+
         covered = 0
-        for ci, chunk in enumerate(archive.chunks):
+        for ci, (chunk, result) in enumerate(zip(archive.chunks, decoded)):
             if chunk is None:
                 start = covered
                 n_hb = min(archive.chunk_hyperblocks, n - start)
@@ -431,43 +442,42 @@ class HierarchicalCompressor:
                     f"chunk {ci} starts at hyper-block {chunk.hb_start}, "
                     f"expected {covered}")
             covered += chunk.n_hyperblocks
-            try:
-                c_lh, c_lbs, c_codes = self._decode_chunk(chunk, archive)
-            except ArchiveError as e:
+            if isinstance(result, ArchiveError):
                 if strict:
-                    raise
+                    raise result
                 report.damaged.append(ChunkDamage(
                     chunk=ci, hb_start=chunk.hb_start,
                     n_hyperblocks=chunk.n_hyperblocks, section="decode",
-                    error=repr(e)))
+                    error=repr(result)))
                 continue
+            c_lh, c_lbs, c_codes = result
             s, e = chunk.hb_start, chunk.hb_start + chunk.n_hyperblocks
             q_lh[s:e] = c_lh
-            for stage, c_lb in enumerate(c_lbs):
-                q_lbs[stage][s * k:e * k] = c_lb
+            for stage_i, c_lb in enumerate(c_lbs):
+                q_lbs[stage_i][s * k:e * k] = c_lb
             for j, code in enumerate(c_codes):
                 gae_codes[s * gae_per_hb + j] = code
         if covered != n:
             raise MalformedStream(
                 f"chunks cover {covered} hyper-blocks, archive declares {n}")
 
-        lat = np.asarray(dequantize(jnp.asarray(q_lh), cfg.hb_bin))
-        y = np.asarray(jax.jit(hbae_mod.hbae_decode)(self.hbae_params,
-                                                     jnp.asarray(lat)))
-        recon = y
-        for p, q_lb in zip(self.bae_params, q_lbs):
-            lb = np.asarray(dequantize(jnp.asarray(q_lb), cfg.bae_bin))
-            r_hat = np.asarray(jax.jit(bae_mod.bae_decode)(p, jnp.asarray(lb)))
-            recon = recon + r_hat.reshape(n, k, d)
+        # fused dequantize+decode back-end — the same cached program that
+        # produced the reconstruction the GAE encoder verified against.
+        with exec_mod.stage("ae_decode", archive.n_values):
+            recon = exec_mod.run_decompress_stage(
+                self.hbae_params, self.bae_params, q_lh, q_lbs,
+                cfg.hb_bin, cfg.bae_bin)
 
         if archive.gae_dim and gae_codes:
-            r_gae = self._gae_view(recon)
-            idxs = sorted(gae_codes)
-            sub = gae.gae_decode_blocks(r_gae[idxs], self.basis,
-                                        [gae_codes[i] for i in idxs],
-                                        cfg.gae_bin)
-            r_gae[idxs] = sub
-            recon = self._gae_unview(r_gae, recon.shape)
+            with exec_mod.stage("gae_decode", archive.n_values):
+                r_gae = self._gae_view(recon)
+                keys = sorted(gae_codes)
+                idxs = np.fromiter(keys, np.int64, len(keys))
+                sub = gae.gae_decode_blocks(r_gae[idxs], self.basis,
+                                            [gae_codes[i] for i in keys],
+                                            cfg.gae_bin)
+                r_gae[idxs] = sub
+                recon = self._gae_unview(r_gae, recon.shape)
         if strict:
             return recon
         return recon, report
@@ -541,8 +551,12 @@ class HierarchicalCompressor:
         return obj
 
     def model_bytes(self) -> int:
-        total = sum(x.size * 4 for x in jax.tree.leaves((self.hbae_params,
-                                                         self.bae_params)))
+        """Storage cost of the decoder-side model (params + PCA basis), using
+        each leaf's ACTUAL dtype width — a float16 or float64 leaf is no
+        longer mis-billed at 4 bytes/element."""
+        total = sum(x.size * np.dtype(x.dtype).itemsize
+                    for x in jax.tree.leaves((self.hbae_params,
+                                              self.bae_params)))
         if self.basis is not None:
-            total += self.basis.size * 4
+            total += self.basis.size * np.dtype(self.basis.dtype).itemsize
         return total

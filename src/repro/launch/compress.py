@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from repro.configs import get_compressor_config
+from repro.core import exec as exec_mod
 from repro.core.errors import ArchiveError
 from repro.core.pipeline import HierarchicalCompressor
 from repro.data import synthetic
@@ -67,9 +68,12 @@ def main(argv=None) -> int:
         log=lambda s, l: print(f"  step {s}: mse {l:.3e}"))
     print(f"fit in {time.time() - t0:.1f}s")
 
+    exec_mod.reset_stage_stats()
     archive = comp.compress(hyperblocks, tau=args.tau,
                             chunk_hyperblocks=args.chunk_hyperblocks)
     recon = comp.decompress(archive)
+    print("-- hot-path stage throughput --")
+    print(exec_mod.stats_summary())
 
     # hard per-block guarantee check
     d_gae = cfg.gae_block_elems or cfg.block_elems

@@ -263,6 +263,49 @@ def serialize_archive(archive: Archive) -> bytes:
     return head + b"".join(blob for _, blob in sections)
 
 
+def _stream_size(s: Optional[entropy.HuffmanStream]) -> int:
+    """len(_pack_stream(s)) from framing arithmetic, no bytes built."""
+    if s is None:
+        return 12 + 8
+    return 12 + 9 * s.book.symbols.size + 8 + len(s.payload)
+
+
+def _chunk_size(c: ArchiveChunk) -> int:
+    """len(_pack_chunk(c)) from framing arithmetic, no bytes built."""
+    size = 10 + _stream_size(c.hb_stream)
+    size += sum(_stream_size(s) for s in c.bae_streams)
+    if c.gae_index_blob:
+        if c.gae_coeff_stream is not None:
+            size += _stream_size(c.gae_coeff_stream)
+        size += 4 + len(c.gae_index_blob) + 4 + len(c.gae_binexp_blob)
+    return size
+
+
+def serialized_size(archive: Archive) -> int:
+    """Exact ``len(serialize_archive(archive))`` WITHOUT building the payload
+    bytes: O(sections) arithmetic over the framing layout (the meta JSON is
+    the only section actually rendered).  Keeps ``Archive.compressed_bytes``
+    / ``compression_ratio`` cheap enough to query inside benchmark sweeps."""
+    if any(c is None for c in archive.chunks):
+        raise ValueError("cannot size an archive with damaged chunks")
+    meta = {
+        "format": VERSION,
+        "n_hyperblocks": archive.n_hyperblocks,
+        "n_values": archive.n_values,
+        "chunk_hyperblocks": archive.chunk_hyperblocks,
+        "gae_dim": archive.gae_dim,
+        "n_chunks": len(archive.chunks),
+        "chunks": [[c.hb_start, c.n_hyperblocks] for c in archive.chunks],
+    }
+    sizes = [(_META_NAME, len(json.dumps(meta, sort_keys=True).encode()))]
+    sizes += [(_chunk_name(i), _chunk_size(c))
+              for i, c in enumerate(archive.chunks)]
+    table_len = sum(2 + len(name.encode()) + _SECTION_FIXED.size
+                    for name, _ in sizes)
+    return (_PROLOGUE.size + table_len + 4
+            + sum(length for _, length in sizes))
+
+
 def deserialize_archive(data: bytes, *, strict: bool = True) -> Archive:
     """Parse + verify a container.  ``strict=True`` raises on ANY damage;
     ``strict=False`` tolerates damaged chunk sections (they become ``None``

@@ -1,0 +1,275 @@
+"""Hot-path execution layer tests: persistent jit cache + retrace accounting,
+fused stage programs, chunk-parallel codecs, and the guarantee/accounting
+bugfix regressions (GuaranteeUnsatisfiable, model_bytes dtypes, cached
+compressed_bytes, strict/tolerant decode parity)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CompressorConfig, HierarchicalCompressor
+from repro.core import bae as bae_mod
+from repro.core import entropy, gae
+from repro.core import exec as exec_mod
+from repro.core import hbae as hbae_mod
+from repro.core.errors import GuaranteeUnsatisfiable, MalformedStream
+from repro.runtime import archive_io
+
+
+# ---------------------------------------------------------------------------
+# fixtures: an UNTRAINED compressor (random init) — the hot path, codecs and
+# guarantees don't care whether the AE is good, and skipping fit() keeps the
+# suite fast.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def comp_hb():
+    cfg = CompressorConfig(block_elems=40, k=2, emb=16, hidden=32, hb_latent=8,
+                           bae_hidden=32, bae_latent=4, gae_block_elems=80,
+                           hb_bin=0.01, bae_bin=0.01, gae_bin=0.02)
+    comp = HierarchicalCompressor(cfg)
+    key = jax.random.PRNGKey(0)
+    khb, kb = jax.random.split(key)
+    comp.hbae_params = hbae_mod.hbae_init(
+        khb, in_dim=cfg.block_elems, k=cfg.k, emb=cfg.emb, hidden=cfg.hidden,
+        latent=cfg.hb_latent, heads=cfg.heads)
+    comp.bae_params = [bae_mod.bae_init(kb, in_dim=cfg.block_elems,
+                                        hidden=cfg.bae_hidden,
+                                        latent=cfg.bae_latent)]
+    rng = np.random.default_rng(0)
+    hb = rng.standard_normal((24, cfg.k, cfg.block_elems)).astype(np.float32)
+    hb *= 0.1
+    comp.fit_basis(hb)
+    return comp, hb
+
+
+# ---------------------------------------------------------------------------
+# persistent jit cache
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_returns_same_wrapper():
+    c = exec_mod.JitCache()
+    f = lambda x: x + 1
+    w1 = c.get("inc", f)
+    w2 = c.get("inc", f)
+    assert w1 is w2
+    # different statics => distinct compiled wrapper
+    w3 = c.get("inc", f, static_argnums=(0,))
+    assert w3 is not w1
+
+
+def test_jit_cache_counts_retraces_not_calls():
+    c = exec_mod.JitCache()
+    sq = c.get("sq", lambda x: x * x)
+    x4 = np.arange(4, dtype=np.float32)
+    sq(x4)
+    sq(x4 + 1)                      # same shape/dtype: cache hit
+    sq(x4 + 2)
+    assert c.retrace_counts() == {"sq": 1}
+    sq(np.arange(5, dtype=np.float32))   # new shape: one more trace
+    assert c.retrace_counts() == {"sq": 2}
+    assert c.total_retraces() == 2
+
+
+def test_roundtrip_retrace_stable_after_warmup(comp_hb):
+    comp, hb = comp_hb
+    # warmup traces every program for this shape
+    a = comp.compress(hb, tau=0.5)
+    comp.decompress(a)
+    before = exec_mod.total_retraces()
+    for _ in range(2):
+        a = comp.compress(hb, tau=0.5)
+        comp.decompress(a)
+    assert exec_mod.total_retraces() == before, exec_mod.retrace_counts()
+
+
+def test_stage_stats_accumulate():
+    exec_mod.reset_stage_stats()
+    with exec_mod.stage("unit_test_stage", 100):
+        pass
+    with exec_mod.stage("unit_test_stage", 50):
+        pass
+    st = exec_mod.stage_stats()["unit_test_stage"]
+    assert st.calls == 2 and st.values == 150 and st.seconds >= 0.0
+    assert "unit_test_stage" in exec_mod.stats_summary()
+    exec_mod.reset_stage_stats()
+    assert "unit_test_stage" not in exec_mod.stage_stats()
+
+
+def test_map_parallel_preserves_order(monkeypatch):
+    items = list(range(37))
+    assert exec_mod.map_parallel(lambda x: x * x, items) == \
+        [x * x for x in items]
+    # forced-serial configuration must agree bit-for-bit
+    monkeypatch.setenv("REPRO_CODEC_WORKERS", "1")
+    assert exec_mod.map_parallel(lambda x: x * x, items) == \
+        [x * x for x in items]
+
+
+# ---------------------------------------------------------------------------
+# GAE guarantee regressions
+# ---------------------------------------------------------------------------
+
+def test_gae_unsatisfiable_raises_typed_error():
+    # A zero basis can never span the residual: every refinement step keeps
+    # err = ||x - x_r||.  The encoder previously emitted the violating block
+    # silently; now it must raise with full diagnostics.
+    d = 16
+    x = np.ones((3, d), np.float32)
+    x_r = np.zeros((3, d), np.float32)
+    basis = np.zeros((d, d), np.float32)
+    with pytest.raises(GuaranteeUnsatisfiable) as ei:
+        gae.gae_encode_blocks(x, x_r, basis, tau=1e-4, bin_size=0.01,
+                              max_refine=3)
+    e = ei.value
+    assert e.err > e.tau and e.tau == pytest.approx(1e-4)
+    assert e.max_refine == 3 and 0 <= e.block < 3
+
+
+def test_gae_encode_never_emits_violating_block():
+    # Coarse bin vs tiny tau forces the per-block repair loop (bin_exp > 0);
+    # every emitted block must still satisfy the bound.
+    rng = np.random.default_rng(1)
+    d = 32
+    basis = np.linalg.qr(rng.standard_normal((d, d)))[0].astype(np.float32)
+    x = rng.standard_normal((20, d)).astype(np.float32)
+    x_r = x + 0.3 * rng.standard_normal((20, d)).astype(np.float32)
+    tau = 0.05
+    out, codes = gae.gae_encode_blocks(x, x_r, basis, tau=tau, bin_size=0.5)
+    errs = np.linalg.norm(x - out, axis=1)
+    assert np.all(errs <= tau * (1 + 1e-5)), errs.max()
+    assert any(c.bin_exp > 0 for c in codes)   # the repair loop really ran
+    # decode side reproduces the encoder's corrected output exactly
+    dec = gae.gae_decode_blocks(x_r.copy(), basis, codes, bin_size=0.5)
+    np.testing.assert_allclose(dec, out, atol=1e-5)
+
+
+def test_gae_codes_are_ascending_index_order():
+    rng = np.random.default_rng(2)
+    d = 24
+    basis = np.linalg.qr(rng.standard_normal((d, d)))[0].astype(np.float32)
+    x = rng.standard_normal((8, d)).astype(np.float32)
+    x_r = np.zeros_like(x)
+    _, codes = gae.gae_encode_blocks(x, x_r, basis, tau=0.1, bin_size=0.01)
+    assert any(c.m > 1 for c in codes)
+    for c in codes:
+        assert c.indices.size == c.m == c.qcoeffs.size
+        assert np.all(np.diff(c.indices) > 0)   # strictly ascending
+
+
+def test_select_host_matches_device_select():
+    rng = np.random.default_rng(3)
+    d = 48
+    basis = np.linalg.qr(rng.standard_normal((d, d)))[0].astype(np.float32)
+    for trial in range(3):
+        r = rng.standard_normal((16, d)).astype(np.float32) * (0.2 + trial)
+        host = gae.select_host(r, basis, tau=0.3, bin_size=0.02)
+        dev = jax.device_get(gae.gae_select(
+            jax.numpy.asarray(r), jax.numpy.asarray(basis), 0.3, 0.02))
+        np.testing.assert_array_equal(host.m, dev.m)
+        np.testing.assert_array_equal(host.ok, dev.ok)
+        np.testing.assert_array_equal(host.q_sorted, dev.q_sorted)
+        np.testing.assert_allclose(host.corrected, dev.corrected, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# accounting bugfixes
+# ---------------------------------------------------------------------------
+
+def test_model_bytes_uses_leaf_dtype_width():
+    cfg = CompressorConfig(block_elems=8, k=2)
+    comp = HierarchicalCompressor(cfg)
+    comp.hbae_params = {"w": np.zeros((4, 4), np.float16)}
+    comp.bae_params = [{"w": np.zeros(10, np.float64)}]
+    comp.basis = np.zeros((3, 3), np.float32)
+    assert comp.model_bytes() == 16 * 2 + 10 * 8 + 9 * 4
+
+
+def test_compressed_bytes_matches_framing_and_caches(comp_hb):
+    comp, hb = comp_hb
+    archive = comp.compress(hb, tau=0.5)
+    blob = archive_io.serialize_archive(archive)
+    assert archive_io.serialized_size(archive) == len(blob)
+    assert archive.compressed_bytes() == len(blob)
+    assert archive._size_cache == len(blob)          # cached after first query
+    assert archive.compressed_bytes() == len(blob)   # stable on re-query
+    archive.invalidate_size_cache()
+    assert archive._size_cache is None
+    assert archive.compressed_bytes() == len(blob)
+
+
+# ---------------------------------------------------------------------------
+# strict vs tolerant decode parity
+# ---------------------------------------------------------------------------
+
+def test_nonstrict_decode_bit_identical_on_undamaged_archive(comp_hb):
+    comp, hb = comp_hb
+    archive = comp.compress(hb, tau=0.5, chunk_hyperblocks=8)
+    strict = comp.decompress(archive)
+    tolerant, report = comp.decompress(archive, strict=False)
+    assert report.ok and not report.damaged
+    assert np.array_equal(strict, tolerant)
+    # and the same through a full container round-trip
+    archive2 = archive_io.deserialize_archive(
+        archive_io.serialize_archive(archive))
+    tolerant2, report2 = comp.decompress(archive2, strict=False)
+    assert report2.ok
+    assert np.array_equal(strict, tolerant2)
+
+
+# ---------------------------------------------------------------------------
+# vectorized codec twins vs their scalar oracles
+# ---------------------------------------------------------------------------
+
+def test_huffman_vector_decode_matches_scalar():
+    rng = np.random.default_rng(4)
+    for n in (300, 1000, 5000):   # all above _VECTOR_DECODE_MIN
+        vals = rng.geometric(0.3, size=n).astype(np.int64) - 3
+        book = entropy.build_huffman(vals)
+        data = entropy.huffman_encode(vals, book)
+        fast = entropy.huffman_decode(data, book, n)
+        slow = entropy.huffman_decode_scalar(data, book, n)
+        np.testing.assert_array_equal(fast, slow)
+        np.testing.assert_array_equal(fast, vals)
+
+
+def test_huffman_vector_decode_matches_scalar_on_corruption():
+    rng = np.random.default_rng(5)
+    vals = rng.geometric(0.4, size=800).astype(np.int64)
+    book = entropy.build_huffman(vals)
+    data = bytearray(entropy.huffman_encode(vals, book))
+    for _ in range(20):
+        pos = int(rng.integers(len(data)))
+        bit = 1 << int(rng.integers(8))
+        data[pos] ^= bit
+        fast_err = slow_err = fast = slow = None
+        try:
+            fast = entropy.huffman_decode(bytes(data), book, 800)
+        except (MalformedStream, entropy.TruncatedArchive) as e:
+            fast_err = (type(e), str(e))
+        try:
+            slow = entropy.huffman_decode_scalar(bytes(data), book, 800)
+        except (MalformedStream, entropy.TruncatedArchive) as e:
+            slow_err = (type(e), str(e))
+        assert fast_err == slow_err
+        if fast_err is None:
+            np.testing.assert_array_equal(fast, slow)
+        data[pos] ^= bit   # restore
+
+
+def test_index_set_codec_roundtrip_with_empty_sets():
+    rng = np.random.default_rng(6)
+    dim = 80
+    sets = []
+    for i in range(40):
+        if i % 7 == 0:
+            sets.append(np.zeros(0, np.int32))
+        else:
+            m = int(rng.integers(1, dim + 1))
+            sets.append(np.sort(rng.choice(dim, size=m,
+                                           replace=False)).astype(np.int32))
+    blob = entropy.encode_index_sets(sets, dim)
+    back = entropy.decode_index_sets(blob, expect_dim=dim)
+    assert len(back) == len(sets)
+    for a, b in zip(sets, back):
+        np.testing.assert_array_equal(a, b)
