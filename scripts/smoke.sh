@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 smoke gate: hot-path lint, unit tests, an end-to-end compress ->
 # container -> verify run, a seeded corruption-fuzz pass over the written
-# archive, and the throughput benchmark's retrace-regression gate.
+# archive, the throughput benchmark's retrace-regression gate, the
+# stream-vs-batch parity gate, and the retrace-budget sweep.
 # Everything here must stay green; run before merging.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,32 +10,44 @@ export PYTHONPATH=src
 
 OUT="${TMPDIR:-/tmp}/smoke_archive.rba"
 
-echo "== 1/5 hot-path jit lint =="
+echo "== 1/7 hot-path jit lint =="
 # Inline jax.jit() wrappers in core hot paths discard the trace cache and
 # retrace per call — all jitted programs must go through core/exec.py's
 # persistent cache (see docs/PERF.md).
-if grep -rn 'jax\.jit(' src/repro/core/ --include='*.py' \
+if grep -rn 'jax\.jit(' src/repro/core/ src/repro/stream/ --include='*.py' \
         | grep -v 'core/exec\.py' \
         | grep -v 'functools\.partial(jax\.jit' \
         | grep -v '`' | grep -v '^[^:]*:[0-9]*: *#'; then
-    echo "FAIL: inline jax.jit( call site in src/repro/core/ hot path" \
+    echo "FAIL: inline jax.jit( call site in src/repro/ hot path" \
          "(route it through core/exec.py's JitCache)" >&2
     exit 1
 fi
 
-echo "== 2/5 unit tests =="
+echo "== 2/7 unit tests =="
 python -m pytest -x -q
 
-echo "== 3/5 end-to-end compress + container verify =="
+echo "== 3/7 end-to-end compress + container verify =="
 python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
     --epochs-scale 0.25 --chunk-hyperblocks 32 --out "$OUT" --verify
 
-echo "== 4/5 corruption fuzz (seeded) =="
+echo "== 4/7 corruption fuzz (seeded) =="
 python -m repro.runtime.faultinject "$OUT" --trials 64 --seed 0
 
-echo "== 5/5 throughput bench (smoke: retrace gate) =="
+echo "== 5/7 throughput bench (smoke: retrace gate) =="
 python benchmarks/bench_pipeline_throughput.py --smoke \
     --out "${TMPDIR:-/tmp}/BENCH_pipeline_smoke.json"
+
+echo "== 6/7 stream-vs-batch gate (byte-identical sections + overlap) =="
+# Same input => the streamed container must be byte-identical to the batch
+# serialization (identical payload sections AND identical compressed_bytes),
+# with measured device/host overlap > 0.  See docs/STREAMING.md.
+python benchmarks/bench_stream_overlap.py --smoke \
+    --out "${TMPDIR:-/tmp}/BENCH_stream_smoke.json"
+
+echo "== 7/7 retrace-budget sweep =="
+# Trace count over the (n_hyperblocks, bae_stages) sweep must equal the
+# distinct-shape count — streaming adds zero traces over batch.
+python benchmarks/bench_retrace_sweep.py
 
 rm -f "$OUT"
 echo "smoke OK"

@@ -42,7 +42,7 @@ import dataclasses
 import os
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Iterable, Optional, Sequence
 
 import jax
@@ -136,17 +136,30 @@ _STAGE_LOCK = threading.Lock()
 
 @contextlib.contextmanager
 def stage(name: str, n_values: int = 0):
-    """Time one hot-path stage; accumulates wall time + processed values."""
+    """Time one hot-path stage; accumulates wall time + processed values.
+
+    Thread-safe: the codec worker pool and the streaming scheduler both enter
+    stages concurrently, so every read-modify-write of the accumulator happens
+    under ``_STAGE_LOCK`` (the ``StageStat`` instances themselves are only
+    ever mutated while the lock is held; ``stage_stats`` hands out copies).
+    """
     t0 = time.perf_counter()
     try:
         yield
     finally:
-        dt = time.perf_counter() - t0
-        with _STAGE_LOCK:
-            st = _STAGES.setdefault(name, StageStat())
-            st.calls += 1
-            st.seconds += dt
-            st.values += int(n_values)
+        record_stage(name, time.perf_counter() - t0, n_values)
+
+
+def record_stage(name: str, seconds: float, n_values: int = 0,
+                 calls: int = 1) -> None:
+    """Accumulate a pre-measured duration into a stage counter (the streaming
+    scheduler measures busy time inside worker threads and folds it in here).
+    Thread-safe."""
+    with _STAGE_LOCK:
+        st = _STAGES.setdefault(name, StageStat())
+        st.calls += int(calls)
+        st.seconds += float(seconds)
+        st.values += int(n_values)
 
 
 def stage_stats() -> dict[str, StageStat]:
@@ -155,16 +168,45 @@ def stage_stats() -> dict[str, StageStat]:
 
 
 def reset_stage_stats() -> None:
+    """Clear stage timings AND the gauge/counter registry."""
     with _STAGE_LOCK:
         _STAGES.clear()
+        _COUNTERS.clear()
+
+
+# -- gauge/counter registry (queue depths, overlap seconds, ...) ------------
+# Scalar counters that don't fit the calls/seconds/values shape of StageStat:
+# the streaming scheduler records max queue depths and measured device/host
+# overlap here.  Shares _STAGE_LOCK so a stats snapshot is one lock hop.
+
+_COUNTERS: dict[str, float] = {}
+
+
+def counter_add(name: str, delta: float = 1.0) -> None:
+    with _STAGE_LOCK:
+        _COUNTERS[name] = _COUNTERS.get(name, 0.0) + float(delta)
+
+
+def counter_max(name: str, value: float) -> None:
+    """Record a high-water mark (e.g. observed queue depth)."""
+    with _STAGE_LOCK:
+        if value > _COUNTERS.get(name, float("-inf")):
+            _COUNTERS[name] = float(value)
+
+
+def counters() -> dict[str, float]:
+    with _STAGE_LOCK:
+        return dict(_COUNTERS)
 
 
 def stats_summary() -> str:
-    """Human-readable per-stage throughput + retrace report."""
+    """Human-readable per-stage throughput + counter + retrace report."""
     lines = []
     for name, st in sorted(stage_stats().items()):
         lines.append(f"{name}: {st.calls} calls, {st.seconds:.3f}s, "
                      f"{st.values_per_s() / 1e6:.2f} Mvalues/s")
+    for name, value in sorted(counters().items()):
+        lines.append(f"{name}: {value:g}")
     traces = retrace_counts()
     if traces:
         total = sum(traces.values())
@@ -202,16 +244,43 @@ def _pool() -> ThreadPoolExecutor:
         return _POOL
 
 
+def pool_submit(fn: Callable, *args, **kwargs) -> Future:
+    """Submit one call onto the shared codec pool (the streaming scheduler's
+    host-encode stage rides the same workers as ``map_parallel``)."""
+    return _pool().submit(fn, *args, **kwargs)
+
+
 def map_parallel(fn: Callable, items: Iterable) -> list:
     """``[fn(x) for x in items]`` across the shared pool, order-preserving.
 
     Falls back to the serial loop for <=1 items or a 1-worker configuration
     so behavior stays bit-identical and easy to force in tests.
+
+    Exception semantics are DETERMINISTIC BY ITEM INDEX, not completion
+    order: if several items raise, the exception propagated is always the one
+    from the lowest-index failing item — exactly what the serial loop would
+    raise — regardless of worker scheduling.  Items after the first detected
+    failure are cancelled if they have not started; items before it always
+    ran to completion, so a failing streaming compress is reproducible in
+    tests.
     """
     items = list(items)
     if len(items) <= 1 or codec_workers() <= 1:
         return [fn(x) for x in items]
-    return list(_pool().map(fn, items))
+    futures = [_pool().submit(fn, x) for x in items]
+    results: list = []
+    first_err: Optional[BaseException] = None
+    for f in futures:
+        if first_err is None:
+            try:
+                results.append(f.result())
+            except BaseException as e:   # noqa: BLE001 — re-raised below
+                first_err = e
+        else:
+            f.cancel()
+    if first_err is not None:
+        raise first_err
+    return results
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +342,33 @@ def _as_q32(q: np.ndarray) -> np.ndarray:
     return q.astype(np.int32) if q.dtype != np.int32 else q
 
 
+def run_compress_stage_async(hbae_params: dict, bae_params: list,
+                             hyperblocks: np.ndarray, hb_bin: float,
+                             bae_bin: float):
+    """Dispatch the fused compress front-end WITHOUT blocking on the result.
+
+    Returns the on-device ``(q_lh, [q_lb per stage], recon)`` arrays.  jax
+    dispatch is asynchronous, so the call returns as soon as the programs are
+    enqueued — the streaming scheduler dispatches stripe *i+1* while stripe
+    *i*'s results are still being computed/fetched.  Pass the handles to
+    ``fetch_compress_stage`` to materialize numpy arrays.
+    """
+    enc = _CACHE.get("encode_frontend", _encode_frontend)
+    dec = _CACHE.get("decode_backend", _decode_backend)
+    x = jnp.asarray(hyperblocks)
+    q_lh, q_lbs = enc(hbae_params, bae_params, x, hb_bin, bae_bin)
+    recon = dec(hbae_params, bae_params, q_lh, q_lbs, hb_bin, bae_bin)
+    return q_lh, q_lbs, recon
+
+
+def fetch_compress_stage(handles) -> tuple[np.ndarray, list[np.ndarray],
+                                           np.ndarray]:
+    """Block until the dispatched front-end finishes and fetch numpy results
+    (the per-stripe ``device_get`` half of the double-buffered transfer)."""
+    q_lh, q_lbs, recon = jax.device_get(handles)
+    return np.asarray(q_lh), [np.asarray(q) for q in q_lbs], np.asarray(recon)
+
+
 def run_compress_stage(hbae_params: dict, bae_params: list,
                        hyperblocks: np.ndarray, hb_bin: float, bae_bin: float
                        ) -> tuple[np.ndarray, list[np.ndarray], np.ndarray]:
@@ -283,13 +379,8 @@ def run_compress_stage(hbae_params: dict, bae_params: list,
     by the same ``decode_backend`` program ``run_decompress_stage`` uses, so
     the GAE encoder corrects exactly what the decoder will reproduce.
     """
-    enc = _CACHE.get("encode_frontend", _encode_frontend)
-    dec = _CACHE.get("decode_backend", _decode_backend)
-    x = jnp.asarray(hyperblocks)
-    q_lh, q_lbs = enc(hbae_params, bae_params, x, hb_bin, bae_bin)
-    recon = dec(hbae_params, bae_params, q_lh, q_lbs, hb_bin, bae_bin)
-    q_lh, q_lbs, recon = jax.device_get((q_lh, q_lbs, recon))
-    return np.asarray(q_lh), [np.asarray(q) for q in q_lbs], np.asarray(recon)
+    return fetch_compress_stage(run_compress_stage_async(
+        hbae_params, bae_params, hyperblocks, hb_bin, bae_bin))
 
 
 def run_decompress_stage(hbae_params: dict, bae_params: list,

@@ -30,7 +30,8 @@ from repro.core import exec as exec_mod
 from repro.core import hbae as hbae_mod
 from repro.core import training
 from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,
-                               DamageReport, MalformedStream)
+                               DamageReport, GuaranteeUnsatisfiable,
+                               MalformedStream)
 
 Array = jax.Array
 
@@ -246,51 +247,65 @@ class HierarchicalCompressor:
             width = ((width + align - 1) // align) * align
         return width
 
-    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None,
-                 chunk_hyperblocks: int = 64) -> Archive:
+    def stripe_spans(self, n_hyperblocks: int, chunk_hyperblocks: int,
+                     with_gae: bool) -> list[tuple[int, int]]:
+        """``[(hb_start, n_hb), ...]`` stripe tiling of ``n_hyperblocks`` at
+        the GAE-aligned chunk width.  The SAME tiling drives the batch
+        compress loop, the streaming scheduler, and the streaming archive
+        writer's up-front section table."""
+        width = self._chunk_width(chunk_hyperblocks, with_gae=with_gae)
+        return [(s, min(width, n_hyperblocks - s))
+                for s in range(0, n_hyperblocks, width)]
+
+    def encode_stripe_device(self, stripe: np.ndarray
+                             ) -> tuple[np.ndarray, list[np.ndarray],
+                                        np.ndarray]:
+        """Device half of one stripe's encode: fused front-end + shared
+        decode program on the stripe's hyper-blocks only."""
+        return exec_mod.run_compress_stage(
+            self.hbae_params, self._stage_params(), stripe,
+            self.cfg.hb_bin, self.cfg.bae_bin)
+
+    def encode_stripe_host(self, hb_start: int, stripe: np.ndarray,
+                           q_lh: np.ndarray, q_lbs: list[np.ndarray],
+                           recon: np.ndarray, tau: Optional[float],
+                           gae_dim: int) -> ArchiveChunk:
+        """Host half of one stripe's encode: GAE error-bound coding + chunk
+        entropy coding, from the stripe's own data only.
+
+        Both the batch ``compress`` loop and the streaming scheduler call
+        exactly this function on exactly the same slices, which is what makes
+        their chunk sections byte-identical by construction (not by floating-
+        point luck across different batch shapes).
+        """
         cfg = self.cfg
-        n, k, d = hyperblocks.shape
-
-        # 1+2. fused device-resident AE front-end: HBAE + BAE stage latents
-        # (quantized) and the decoder's reconstruction, in two cached jitted
-        # programs with ONE host->device and ONE device->host transfer.
-        with exec_mod.stage("ae_encode", hyperblocks.size):
-            q_lh, q_lbs, recon = exec_mod.run_compress_stage(
-                self.hbae_params, self._stage_params(), hyperblocks,
-                cfg.hb_bin, cfg.bae_bin)
-
-        # 3. GAE error-bound post-processing
+        k, d = cfg.k, cfg.block_elems
         codes: list[gae.GAEBlockCode] = []
-        gae_dim = 0
         if tau is not None:
-            if self.basis is None:
-                self.fit_basis(hyperblocks)
-            with exec_mod.stage("gae_encode", hyperblocks.size):
-                x_gae = self._gae_view(hyperblocks)
+            d_gae = cfg.gae_block_elems or d
+            gae_per_hb = (k * d) // d_gae
+            with exec_mod.stage("gae_encode", stripe.size):
+                x_gae = self._gae_view(stripe)
                 r_gae = self._gae_view(recon)
-                _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis,
-                                                 tau, cfg.gae_bin)
-            gae_dim = int(self.basis.shape[0])
-
-        # 4. stripe everything into independently-decodable chunks; chunks
-        # are independent by construction, so they entropy-code in parallel.
-        width = self._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
-        d_gae = cfg.gae_block_elems or cfg.block_elems
-        gae_per_hb = (k * d) // d_gae if tau is not None else 0
-
-        def encode_chunk(start: int) -> ArchiveChunk:
-            n_hb = min(width, n - start)
-            hb_stream = entropy.huffman_compress(q_lh[start:start + n_hb])
-            bae_streams = [entropy.huffman_compress(
-                q_lb[start * k:(start + n_hb) * k]) for q_lb in q_lbs]
+                try:
+                    _, codes = gae.gae_encode_blocks(x_gae, r_gae, self.basis,
+                                                     tau, cfg.gae_bin)
+                except GuaranteeUnsatisfiable as e:
+                    # re-raise with the GLOBAL GAE block index so diagnostics
+                    # are stripe-independent
+                    raise GuaranteeUnsatisfiable(
+                        block=hb_start * gae_per_hb + e.block, err=e.err,
+                        tau=e.tau, max_refine=e.max_refine) from e
+        with exec_mod.stage("entropy_encode", stripe.size):
+            hb_stream = entropy.huffman_compress(q_lh)
+            bae_streams = [entropy.huffman_compress(q_lb) for q_lb in q_lbs]
             coeff_stream = None
             index_blob = binexp_blob = b""
             if tau is not None:
-                cchunk = codes[start * gae_per_hb:(start + n_hb) * gae_per_hb]
                 # GAEBlockCode stores indices/coefficients in ascending index
                 # order — exactly the bitmask decode order, no per-code sort
                 all_coeffs, index_sets, binexps = [], [], []
-                for c in cchunk:
+                for c in codes:
                     index_sets.append(c.indices)
                     all_coeffs.append(c.qcoeffs)
                     binexps.append(c.bin_exp)
@@ -301,17 +316,61 @@ class HierarchicalCompressor:
                 index_blob = entropy.encode_index_sets(index_sets, gae_dim)
                 binexp_blob = entropy.zlib_pack(
                     np.asarray(binexps, np.uint8).tobytes())
-            return ArchiveChunk(
-                hb_start=start, n_hyperblocks=n_hb, hb_stream=hb_stream,
-                bae_streams=bae_streams, gae_coeff_stream=coeff_stream,
-                gae_index_blob=index_blob, gae_binexp_blob=binexp_blob)
+        return ArchiveChunk(
+            hb_start=hb_start, n_hyperblocks=stripe.shape[0],
+            hb_stream=hb_stream, bae_streams=bae_streams,
+            gae_coeff_stream=coeff_stream, gae_index_blob=index_blob,
+            gae_binexp_blob=binexp_blob)
 
-        with exec_mod.stage("entropy_encode", hyperblocks.size):
-            chunks: list[Optional[ArchiveChunk]] = exec_mod.map_parallel(
-                encode_chunk, range(0, n, width))
+    def prepare_compress(self, hyperblocks: np.ndarray, tau: Optional[float]
+                         ) -> int:
+        """Shared compress preamble: fit the PCA basis if the caller asked
+        for a guarantee and none exists yet.  Returns ``gae_dim``."""
+        if tau is not None:
+            if self.basis is None:
+                self.fit_basis(hyperblocks)
+            return int(self.basis.shape[0])
+        return 0
+
+    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None,
+                 chunk_hyperblocks: int = 64) -> Archive:
+        """Batch-synchronous compress: the device front-end runs stripe by
+        stripe to completion, THEN the host GAE/entropy coders fan out over
+        the finished stripes.  ``repro.stream.stream_compress`` runs the same
+        per-stripe stages pipelined (host coding of stripe *i* overlapped
+        with the device stage of stripe *i+1*) and produces byte-identical
+        chunks."""
+        cfg = self.cfg
+        n, k, d = hyperblocks.shape
+        gae_dim = self.prepare_compress(hyperblocks, tau)
+        spans = self.stripe_spans(n, chunk_hyperblocks,
+                                  with_gae=tau is not None)
+
+        # 1+2. fused device-resident AE front-end, one stripe per program
+        # call (the stripe IS the archive chunk, so batch and streaming run
+        # identical device shapes).
+        latents: list[tuple] = []
+        with exec_mod.stage("ae_encode", hyperblocks.size):
+            for start, n_hb in spans:
+                latents.append(self.encode_stripe_device(
+                    hyperblocks[start:start + n_hb]))
+
+        # 3+4. host-side GAE + entropy coding, chunk-parallel over stripes
+        # (chunks are independently codable by construction).
+        def encode_chunk(i: int) -> ArchiveChunk:
+            start, n_hb = spans[i]
+            q_lh, q_lbs, recon = latents[i]
+            return self.encode_stripe_host(
+                start, hyperblocks[start:start + n_hb], q_lh, q_lbs, recon,
+                tau, gae_dim)
+
+        chunks: list[Optional[ArchiveChunk]] = exec_mod.map_parallel(
+            encode_chunk, range(len(spans)))
 
         return Archive(n_hyperblocks=n, n_values=hyperblocks.size,
-                       chunk_hyperblocks=width, gae_dim=gae_dim, chunks=chunks)
+                       chunk_hyperblocks=self._chunk_width(
+                           chunk_hyperblocks, with_gae=tau is not None),
+                       gae_dim=gae_dim, chunks=chunks)
 
     # -- decode helpers ------------------------------------------------------
     def _decode_chunk(self, chunk: ArchiveChunk, archive: Archive

@@ -10,6 +10,12 @@ user error bound, verify the per-block guarantee, report CR + NRMSE.
 docs/ARCHIVE_FORMAT.md); ``--verify`` re-reads it from disk and re-checks the
 tau guarantee against the freshly decoded bytes.  Guarantee or verification
 failures exit nonzero with a report instead of a bare assert.
+
+``--stream`` runs the pipelined compress path (repro.stream): host GAE/
+entropy coding of chunk *i* overlaps the device stage of chunk *i+1*, and
+with ``--out`` finished chunk sections stream to disk as they complete
+(crash-safe ``<out>.partial``, atomic finalize).  The resulting container is
+byte-identical to the batch path; see docs/STREAMING.md.
 """
 from __future__ import annotations
 
@@ -52,6 +58,11 @@ def main(argv=None) -> int:
                     help="container stripe width (corruption blast radius)")
     ap.add_argument("--epochs-scale", type=float, default=None,
                     help="scale train epochs (e.g. 0.1 for smoke tests)")
+    ap.add_argument("--stream", action="store_true",
+                    help="pipelined compress (device/host overlap); with "
+                    "--out, chunk sections stream to disk as they finish")
+    ap.add_argument("--queue-depth", type=int, default=2,
+                    help="--stream inter-stage queue bound (backpressure)")
     args = ap.parse_args(argv)
     if args.verify and not args.out:
         ap.error("--verify requires --out")
@@ -69,8 +80,26 @@ def main(argv=None) -> int:
     print(f"fit in {time.time() - t0:.1f}s")
 
     exec_mod.reset_stage_stats()
-    archive = comp.compress(hyperblocks, tau=args.tau,
-                            chunk_hyperblocks=args.chunk_hyperblocks)
+    streamed_bytes = 0
+    if args.stream:
+        from repro.stream import stream_compress
+        try:
+            result = stream_compress(
+                comp, hyperblocks, tau=args.tau,
+                chunk_hyperblocks=args.chunk_hyperblocks,
+                out_path=args.out or None, queue_depth=args.queue_depth)
+        except OSError as e:
+            print(f"ERROR: streaming write failed: {e}", file=sys.stderr)
+            return 3
+        archive, streamed_bytes = result.archive, result.bytes_written
+        s = result.stats
+        print(f"stream: {s.n_items} chunks in {s.wall_s:.2f}s, "
+              f"device/host overlap {s.overlap_s:.2f}s "
+              f"({s.overlap_efficiency() * 100:.0f}% of wall), "
+              f"queue high-water {s.queue_high_water}")
+    else:
+        archive = comp.compress(hyperblocks, tau=args.tau,
+                                chunk_hyperblocks=args.chunk_hyperblocks)
     recon = comp.decompress(archive)
     print("-- hot-path stage throughput --")
     print(exec_mod.stats_summary())
@@ -92,15 +121,23 @@ def main(argv=None) -> int:
     print(f"max per-block l2: {errs.max():.4f} <= tau={args.tau}")
 
     if args.out:
-        from repro.runtime import archive_io
-        try:
-            nbytes = archive_io.write_archive(archive, args.out)
-        except OSError as e:
-            print(f"ERROR: cannot write container: {e}", file=sys.stderr)
-            return 3
-        print(f"container written to {args.out} "
-              f"({nbytes:,} bytes = {len(archive.chunks)} chunks; "
-              f"on-disk ratio {hyperblocks.size * 4 / nbytes:.1f}x)")
+        if args.stream:
+            # already on disk: the streaming writer finalized it chunk by
+            # chunk during compress
+            nbytes = streamed_bytes
+            print(f"container streamed to {args.out} "
+                  f"({nbytes:,} bytes = {len(archive.chunks)} chunks; "
+                  f"on-disk ratio {hyperblocks.size * 4 / nbytes:.1f}x)")
+        else:
+            from repro.runtime import archive_io
+            try:
+                nbytes = archive_io.write_archive(archive, args.out)
+            except OSError as e:
+                print(f"ERROR: cannot write container: {e}", file=sys.stderr)
+                return 3
+            print(f"container written to {args.out} "
+                  f"({nbytes:,} bytes = {len(archive.chunks)} chunks; "
+                  f"on-disk ratio {hyperblocks.size * 4 / nbytes:.1f}x)")
     if args.verify:
         from repro.runtime import archive_io
         try:

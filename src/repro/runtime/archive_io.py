@@ -233,34 +233,82 @@ def _chunk_name(i: int) -> str:
     return f"chunk/{i:06d}"
 
 
+def chunk_section_name(i: int) -> str:
+    """Public alias for the per-chunk section naming scheme."""
+    return _chunk_name(i)
+
+
+def build_meta_blob(*, n_hyperblocks: int, n_values: int,
+                    chunk_hyperblocks: int, gae_dim: int,
+                    spans: list) -> bytes:
+    """The ``meta`` section bytes for a given stripe tiling.  Shared between
+    ``serialize_archive`` and the streaming writer so both produce identical
+    meta sections for the same geometry — ``spans`` is known BEFORE any chunk
+    is encoded, which is what lets the streaming writer lay out the whole
+    section table up front."""
+    meta = {
+        "format": VERSION,
+        "n_hyperblocks": int(n_hyperblocks),
+        "n_values": int(n_values),
+        "chunk_hyperblocks": int(chunk_hyperblocks),
+        "gae_dim": int(gae_dim),
+        "n_chunks": len(spans),
+        "chunks": [[int(s), int(n)] for s, n in spans],
+    }
+    return json.dumps(meta, sort_keys=True).encode()
+
+
+def pack_head(entries: list) -> bytes:
+    """Prologue + section table + table CRC for ``entries`` =
+    ``[(name, offset, length, crc32, sha256_digest), ...]``."""
+    table = bytearray()
+    for name, offset, length, crc, sha in entries:
+        nb = name.encode()
+        table += struct.pack("<H", len(nb)) + nb
+        table += _SECTION_FIXED.pack(offset, length, crc, sha)
+    head = _PROLOGUE.pack(MAGIC, VERSION, len(entries), len(table)) + table
+    return head + struct.pack("<I", zlib.crc32(head))
+
+
+def head_size(section_names: list) -> int:
+    """Byte length of ``pack_head`` output for the given section names —
+    fixed as soon as the stripe tiling is known, so the streaming writer can
+    reserve the header region before any payload exists."""
+    table_len = sum(2 + len(n.encode()) + _SECTION_FIXED.size
+                    for n in section_names)
+    return _PROLOGUE.size + table_len + 4
+
+
+def pack_chunk_section(c: ArchiveChunk) -> bytes:
+    """Public alias of the chunk section framing encoder."""
+    return _pack_chunk(c)
+
+
+def chunk_section_size(c: ArchiveChunk) -> int:
+    """Exact ``len(pack_chunk_section(c))`` from framing arithmetic (no bytes
+    built) — the streaming writer's span precomputation."""
+    return _chunk_size(c)
+
+
 def serialize_archive(archive: Archive) -> bytes:
     """Serialize to the container byte layout (deterministic)."""
     if any(c is None for c in archive.chunks):
         raise ValueError("cannot serialize an archive with damaged chunks")
-    meta = {
-        "format": VERSION,
-        "n_hyperblocks": archive.n_hyperblocks,
-        "n_values": archive.n_values,
-        "chunk_hyperblocks": archive.chunk_hyperblocks,
-        "gae_dim": archive.gae_dim,
-        "n_chunks": len(archive.chunks),
-        "chunks": [[c.hb_start, c.n_hyperblocks] for c in archive.chunks],
-    }
-    sections = [(_META_NAME, json.dumps(meta, sort_keys=True).encode())]
+    meta_blob = build_meta_blob(
+        n_hyperblocks=archive.n_hyperblocks, n_values=archive.n_values,
+        chunk_hyperblocks=archive.chunk_hyperblocks, gae_dim=archive.gae_dim,
+        spans=[(c.hb_start, c.n_hyperblocks) for c in archive.chunks])
+    sections = [(_META_NAME, meta_blob)]
     sections += [(_chunk_name(i), _pack_chunk(c))
                  for i, c in enumerate(archive.chunks)]
 
-    table = bytearray()
+    entries = []
     offset = 0
     for name, blob in sections:
-        nb = name.encode()
-        table += struct.pack("<H", len(nb)) + nb
-        table += _SECTION_FIXED.pack(offset, len(blob), zlib.crc32(blob),
-                                     hashlib.sha256(blob).digest())
+        entries.append((name, offset, len(blob), zlib.crc32(blob),
+                        hashlib.sha256(blob).digest()))
         offset += len(blob)
-    head = _PROLOGUE.pack(MAGIC, VERSION, len(sections), len(table)) + table
-    head += struct.pack("<I", zlib.crc32(head))
-    return head + b"".join(blob for _, blob in sections)
+    return pack_head(entries) + b"".join(blob for _, blob in sections)
 
 
 def _stream_size(s: Optional[entropy.HuffmanStream]) -> int:
@@ -288,22 +336,14 @@ def serialized_size(archive: Archive) -> int:
     / ``compression_ratio`` cheap enough to query inside benchmark sweeps."""
     if any(c is None for c in archive.chunks):
         raise ValueError("cannot size an archive with damaged chunks")
-    meta = {
-        "format": VERSION,
-        "n_hyperblocks": archive.n_hyperblocks,
-        "n_values": archive.n_values,
-        "chunk_hyperblocks": archive.chunk_hyperblocks,
-        "gae_dim": archive.gae_dim,
-        "n_chunks": len(archive.chunks),
-        "chunks": [[c.hb_start, c.n_hyperblocks] for c in archive.chunks],
-    }
-    sizes = [(_META_NAME, len(json.dumps(meta, sort_keys=True).encode()))]
-    sizes += [(_chunk_name(i), _chunk_size(c))
-              for i, c in enumerate(archive.chunks)]
-    table_len = sum(2 + len(name.encode()) + _SECTION_FIXED.size
-                    for name, _ in sizes)
-    return (_PROLOGUE.size + table_len + 4
-            + sum(length for _, length in sizes))
+    meta_blob = build_meta_blob(
+        n_hyperblocks=archive.n_hyperblocks, n_values=archive.n_values,
+        chunk_hyperblocks=archive.chunk_hyperblocks, gae_dim=archive.gae_dim,
+        spans=[(c.hb_start, c.n_hyperblocks) for c in archive.chunks])
+    names = [_META_NAME] + [_chunk_name(i)
+                            for i in range(len(archive.chunks))]
+    return (head_size(names) + len(meta_blob)
+            + sum(_chunk_size(c) for c in archive.chunks))
 
 
 def deserialize_archive(data: bytes, *, strict: bool = True) -> Archive:

@@ -1,0 +1,19 @@
+"""Streaming compression subsystem: pipelined stage scheduler with
+device/host overlap plus an appendable archive writer.
+
+``stream_compress`` runs the SAME per-stripe stages as the batch
+``HierarchicalCompressor.compress`` — fused device front-end, GAE error-bound
+coding, chunk entropy coding — but pipelined through a ``StreamScheduler``
+so host coding of chunk *i* overlaps the device stage of chunk *i+1*, and
+finished chunk sections stream to disk through
+``repro.runtime.stream_writer.StreamingArchiveWriter`` as they complete.
+
+See docs/STREAMING.md for the scheduler model and queue/backpressure
+semantics.
+"""
+from repro.stream.compress import StreamResult, stream_compress
+from repro.stream.scheduler import (StageSpec, StageGraph, StreamScheduler,
+                                    StreamStats)
+
+__all__ = ["StageSpec", "StageGraph", "StreamScheduler", "StreamStats",
+           "StreamResult", "stream_compress"]

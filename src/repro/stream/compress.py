@@ -1,0 +1,128 @@
+"""Streaming compress: the batch stripe stages, pipelined.
+
+Stage graph (one stripe = one archive chunk flows left to right)::
+
+    dispatch ──▶ transfer ──▶ host_encode ──▶ sink
+    (async jax    (device_get   (GAE bound +     (StreamingArchiveWriter
+     front-end    per stripe,    entropy coding   .append, in-order
+     enqueue)     double-        on the shared    reorder-buffered)
+                  buffered)      codec pool)
+
+* ``dispatch`` calls ``exec.run_compress_stage_async`` — jax dispatch is
+  asynchronous, so the stage only enqueues device work.  The bounded queue to
+  ``transfer`` (depth = ``queue_depth``) is what double-buffers the device:
+  at most ``queue_depth + 1`` stripes of latents exist on device at once.
+* ``transfer`` blocks on ``exec.fetch_compress_stage`` (the per-stripe
+  ``device_get``), overlapping stripe *i*'s download with stripe *i+1*'s
+  compute.
+* ``host_encode`` rides the SHARED codec worker pool (``exec.pool_submit``)
+  — the same threads ``map_parallel`` uses for batch chunk fan-out — and
+  calls ``HierarchicalCompressor.encode_stripe_host``, the exact function
+  the batch path calls on the exact same slices.  Chunk sections are
+  therefore byte-identical to the batch path BY CONSTRUCTION.
+* ``sink`` appends each finished chunk to the ``StreamingArchiveWriter``
+  (chunk *i* can hit disk while chunk *i+2* is still on the device) and
+  collects chunks for the returned in-memory ``Archive``.
+
+On any stage failure the scheduler drains, the writer is aborted — leaving
+``<out_path>.partial`` on disk for ``read_archive(strict=False)`` salvage —
+and the lowest-index stage error is re-raised.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import exec as exec_mod
+from repro.core.pipeline import Archive, ArchiveChunk, HierarchicalCompressor
+from repro.runtime.stream_writer import StreamingArchiveWriter
+from repro.stream.scheduler import StageGraph, StageSpec, StreamScheduler, \
+    StreamStats
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """What ``stream_compress`` hands back."""
+    archive: Archive
+    stats: StreamStats
+    bytes_written: int = 0        # 0 when no out_path was given
+
+
+def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
+                    tau: Optional[float] = None, chunk_hyperblocks: int = 64,
+                    out_path: Optional[str] = None, *, queue_depth: int = 2,
+                    host_workers: Optional[int] = None,
+                    fsync_every: bool = False) -> StreamResult:
+    """Pipelined compress of ``hyperblocks``; byte-identical chunks to
+    ``comp.compress(hyperblocks, tau, chunk_hyperblocks)``.
+
+    When ``out_path`` is given, finished chunk sections stream into
+    ``<out_path>.partial`` as they complete and the container is atomically
+    finalized to ``out_path`` on success; on failure the partial is kept for
+    tolerant salvage.  Without ``out_path`` only the in-memory ``Archive`` is
+    produced.
+    """
+    cfg = comp.cfg
+    n = hyperblocks.shape[0]
+    gae_dim = comp.prepare_compress(hyperblocks, tau)
+    spans = comp.stripe_spans(n, chunk_hyperblocks, with_gae=tau is not None)
+    width = comp._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
+    chunks: list[Optional[ArchiveChunk]] = [None] * len(spans)
+
+    writer: Optional[StreamingArchiveWriter] = None
+    if out_path is not None:
+        writer = StreamingArchiveWriter(
+            out_path, n_hyperblocks=n, n_values=hyperblocks.size,
+            chunk_hyperblocks=width, gae_dim=gae_dim, spans=spans,
+            fsync_every=fsync_every)
+
+    def dispatch(i: int, span: tuple) -> tuple:
+        start, n_hb = span
+        handles = exec_mod.run_compress_stage_async(
+            comp.hbae_params, comp._stage_params(),
+            hyperblocks[start:start + n_hb], cfg.hb_bin, cfg.bae_bin)
+        return span, handles
+
+    def transfer(i: int, payload: tuple) -> tuple:
+        span, handles = payload
+        return span, exec_mod.fetch_compress_stage(handles)
+
+    def host_encode(i: int, payload: tuple) -> ArchiveChunk:
+        (start, n_hb), (q_lh, q_lbs, recon) = payload
+        # ride the shared codec pool — same workers as batch map_parallel
+        return exec_mod.pool_submit(
+            comp.encode_stripe_host, start,
+            hyperblocks[start:start + n_hb], q_lh, q_lbs, recon,
+            tau, gae_dim).result()
+
+    def sink(i: int, chunk: ArchiveChunk) -> int:
+        chunks[i] = chunk
+        if writer is not None:
+            writer.append(i, chunk)
+        return i
+
+    workers = host_workers if host_workers else exec_mod.codec_workers()
+    graph = StageGraph([
+        StageSpec("dispatch", dispatch, workers=1, queue_depth=queue_depth),
+        StageSpec("transfer", transfer, workers=1, queue_depth=queue_depth),
+        StageSpec("host_encode", host_encode, workers=max(1, workers),
+                  queue_depth=max(queue_depth, workers)),
+        StageSpec("sink", sink, workers=1, queue_depth=1),
+    ])
+
+    bytes_written = 0
+    try:
+        _, stats = StreamScheduler(graph).run(spans)
+    except BaseException:
+        if writer is not None:
+            writer.abort()     # keep <out_path>.partial for tolerant salvage
+        raise
+    if writer is not None:
+        bytes_written = writer.finalize()
+
+    archive = Archive(n_hyperblocks=n, n_values=hyperblocks.size,
+                      chunk_hyperblocks=width, gae_dim=gae_dim, chunks=chunks)
+    return StreamResult(archive=archive, stats=stats,
+                        bytes_written=bytes_written)

@@ -1,0 +1,233 @@
+"""Pipelined stage scheduler: bounded queues, backpressure, overlap metering.
+
+A ``StageGraph`` is a linear chain of ``StageSpec``s.  ``StreamScheduler``
+runs every input item through every stage on dedicated worker threads, with a
+bounded ``queue.Queue`` between consecutive stages:
+
+* **Backpressure** — ``queue_depth`` caps how many finished results of stage
+  *s* may wait for stage *s+1*.  A full queue blocks stage *s*'s workers (and
+  ultimately the feeder), so a slow host coder throttles device dispatch
+  instead of accumulating unbounded device buffers.  Depth 1 between the
+  dispatch and transfer stages is classic double-buffering: one stripe being
+  fetched while at most ``depth + 1`` are in flight behind it.
+* **Ordered feed, unordered completion** — items enter stage 0 in index
+  order; stages with several workers may finish out of order.  Results are
+  collected by index, so downstream consumers (the streaming archive writer)
+  see a deterministic mapping regardless of thread scheduling.
+* **Deterministic failures** — a stage raising on item *j* records the error
+  and drops *j* from the pipeline; every other item still runs to completion
+  (no short-circuit racing).  After the drain, the scheduler raises the error
+  of the LOWEST failing index — the same exception a serial loop would have
+  raised — so streaming failures are reproducible in tests.
+* **Shutdown** — the feeder appends one sentinel per stage-0 worker; the last
+  worker of each stage to see its sentinel forwards sentinels downstream, so
+  every thread exits even on partial failure.
+
+Overlap metering: a shared ``_BusyTracker`` integrates wall time over the
+run, attributing each interval by how many DISTINCT stages had a busy worker
+— ``busy_s`` (>= 1 stage active) and ``overlap_s`` (>= 2 stages active, i.e.
+genuine device/host overlap, measured, not inferred).  Per-stage busy time
+feeds ``exec.record_stage("stream.<name>", ...)`` and queue high-water marks
+feed ``exec.counter_max``, so ``exec.stats_summary()`` shows the whole
+picture next to the batch counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core import exec as exec_mod
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class StageSpec:
+    """One pipeline stage.
+
+    ``fn(index, payload) -> result``; the result is the next stage's payload.
+    ``workers`` threads run the stage concurrently; ``queue_depth`` bounds the
+    stage's INPUT queue — how many upstream results may wait for this stage
+    before the upstream workers (or the feeder, for stage 0) block.
+    """
+    name: str
+    fn: Callable[[int, Any], Any]
+    workers: int = 1
+    queue_depth: int = 2
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError(f"stage {self.name!r}: workers must be >= 1")
+        if self.queue_depth < 1:
+            raise ValueError(f"stage {self.name!r}: queue_depth must be >= 1")
+
+
+class StageGraph:
+    """A linear chain of stages (the only topology the compress path needs;
+    fan-out lives inside a stage via the shared codec pool)."""
+
+    def __init__(self, stages: Sequence[StageSpec]):
+        if not stages:
+            raise ValueError("StageGraph needs at least one stage")
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names: {names}")
+        self.stages = list(stages)
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Measured pipeline behavior for one ``run``."""
+    n_items: int = 0
+    wall_s: float = 0.0
+    busy_s: float = 0.0      # wall time with >= 1 stage busy
+    overlap_s: float = 0.0   # wall time with >= 2 distinct stages busy
+    stage_busy_s: dict = dataclasses.field(default_factory=dict)
+    queue_high_water: dict = dataclasses.field(default_factory=dict)
+
+    def overlap_efficiency(self) -> float:
+        """Fraction of the wall clock during which at least two pipeline
+        stages were simultaneously busy (1.0 = perfectly overlapped)."""
+        return self.overlap_s / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class _BusyTracker:
+    """Integrates wall time by the number of distinct busy stages."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._active: dict[str, int] = {}
+        self._last = time.perf_counter()
+        self.busy_s = 0.0
+        self.overlap_s = 0.0
+
+    def _advance(self) -> None:
+        now = time.perf_counter()
+        dt = now - self._last
+        self._last = now
+        distinct = sum(1 for v in self._active.values() if v > 0)
+        if distinct >= 1:
+            self.busy_s += dt
+        if distinct >= 2:
+            self.overlap_s += dt
+
+    def enter(self, name: str) -> None:
+        with self._lock:
+            self._advance()
+            self._active[name] = self._active.get(name, 0) + 1
+
+    def exit(self, name: str) -> None:
+        with self._lock:
+            self._advance()
+            self._active[name] -= 1
+
+
+class StreamScheduler:
+    """Runs items through a ``StageGraph`` with bounded inter-stage queues."""
+
+    def __init__(self, graph: StageGraph):
+        self.graph = graph
+
+    def run(self, items: Sequence) -> tuple[list, StreamStats]:
+        """Push every item through the pipeline; returns ``(results, stats)``
+        with ``results[i]`` = last stage's output for item ``i``.
+
+        Raises the lowest-index stage error after ALL other items have
+        drained (deterministic regardless of worker scheduling); the partial
+        results of non-failing items are discarded by the raise, but their
+        side effects (e.g. archive-writer appends) have already happened.
+        """
+        stages = self.graph.stages
+        items = list(items)
+        stats = StreamStats(n_items=len(items))
+        if not items:
+            return [], stats
+
+        # queues[s] feeds stage s; the feeder owns queues[0].
+        queues: list[queue.Queue] = [
+            queue.Queue(maxsize=max(1, spec.queue_depth))
+            for spec in stages]
+        results: dict[int, Any] = {}
+        errors: dict[int, BaseException] = {}
+        stage_busy: dict[str, float] = {s.name: 0.0 for s in stages}
+        high_water: dict[str, int] = {s.name: 0 for s in stages}
+        remaining = [s.workers for s in stages]   # workers yet to shut down
+        lock = threading.Lock()
+        busy = _BusyTracker()
+
+        def worker(si: int) -> None:
+            spec = stages[si]
+            in_q = queues[si]
+            out_q = queues[si + 1] if si + 1 < len(stages) else None
+            while True:
+                with lock:
+                    depth = in_q.qsize()
+                    if depth > high_water[spec.name]:
+                        high_water[spec.name] = depth
+                task = in_q.get()
+                if task is _SENTINEL:
+                    break
+                idx, payload = task
+                t0 = time.perf_counter()
+                busy.enter(spec.name)
+                try:
+                    result = spec.fn(idx, payload)
+                except BaseException as e:   # noqa: BLE001 — re-raised by run
+                    with lock:
+                        errors[idx] = e
+                else:
+                    if out_q is not None:
+                        out_q.put((idx, result))
+                    else:
+                        with lock:
+                            results[idx] = result
+                finally:
+                    busy.exit(spec.name)
+                    dt = time.perf_counter() - t0
+                    with lock:
+                        stage_busy[spec.name] += dt
+            # last worker out forwards shutdown downstream
+            with lock:
+                remaining[si] -= 1
+                last = remaining[si] == 0
+            if last and si + 1 < len(stages):
+                for _ in range(stages[si + 1].workers):
+                    queues[si + 1].put(_SENTINEL)
+
+        t_start = time.perf_counter()
+        threads = [threading.Thread(target=worker, args=(si,),
+                                    name=f"stream-{spec.name}-{w}",
+                                    daemon=True)
+                   for si, spec in enumerate(stages)
+                   for w in range(spec.workers)]
+        for t in threads:
+            t.start()
+        for i, item in enumerate(items):
+            queues[0].put((i, item))          # blocks when stage 0 backs up
+        for _ in range(stages[0].workers):
+            queues[0].put(_SENTINEL)
+        for t in threads:
+            t.join()
+        stats.wall_s = time.perf_counter() - t_start
+        stats.busy_s = busy.busy_s
+        stats.overlap_s = busy.overlap_s
+        stats.stage_busy_s = dict(stage_busy)
+        stats.queue_high_water = dict(high_water)
+
+        # fold into the global exec counters so launch/compress.py and the
+        # benchmarks surface pipeline behavior via exec.stats_summary()
+        for name, seconds in stage_busy.items():
+            exec_mod.record_stage(f"stream.{name}", seconds, calls=1)
+        for name, depth in high_water.items():
+            exec_mod.counter_max(f"stream.queue_high_water.{name}", depth)
+        exec_mod.counter_add("stream.overlap_s", stats.overlap_s)
+        exec_mod.counter_add("stream.busy_s", stats.busy_s)
+        exec_mod.counter_max("stream.overlap_efficiency",
+                             round(stats.overlap_efficiency(), 4))
+
+        if errors:
+            raise errors[min(errors)]
+        return [results[i] for i in range(len(items))], stats

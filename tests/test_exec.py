@@ -106,6 +106,55 @@ def test_map_parallel_preserves_order(monkeypatch):
         [x * x for x in items]
 
 
+def test_map_parallel_raises_lowest_index_error(monkeypatch):
+    # several items fail, the later one FINISHES first — the propagated
+    # exception must still be the lowest failing index's, exactly what the
+    # serial loop would raise
+    monkeypatch.setenv("REPRO_CODEC_WORKERS", "4")
+
+    def fn(x):
+        if x in (3, 9):
+            import time
+            time.sleep(0.002 if x == 3 else 0.0)
+            raise ValueError(f"item-{x}")
+        return x
+    for _ in range(5):
+        with pytest.raises(ValueError, match="item-3"):
+            exec_mod.map_parallel(fn, range(12))
+    # serial path agrees
+    monkeypatch.setenv("REPRO_CODEC_WORKERS", "1")
+    with pytest.raises(ValueError, match="item-3"):
+        exec_mod.map_parallel(fn, range(12))
+
+
+def test_stage_and_counter_accumulation_thread_safe():
+    import threading
+    exec_mod.reset_stage_stats()
+    n_threads, n_iter = 8, 200
+
+    def hammer():
+        for _ in range(n_iter):
+            exec_mod.record_stage("mt_stage", 0.001, n_values=10)
+            exec_mod.counter_add("mt_counter", 1.0)
+            exec_mod.counter_max("mt_gauge", 7.0)
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = exec_mod.stage_stats()["mt_stage"]
+    # no lost updates: every read-modify-write landed
+    assert st.calls == n_threads * n_iter
+    assert st.values == n_threads * n_iter * 10
+    assert st.seconds == pytest.approx(n_threads * n_iter * 0.001)
+    counters = exec_mod.counters()
+    assert counters["mt_counter"] == n_threads * n_iter
+    assert counters["mt_gauge"] == 7.0
+    assert "mt_counter: 1600" in exec_mod.stats_summary()
+    exec_mod.reset_stage_stats()
+    assert exec_mod.counters() == {}
+
+
 # ---------------------------------------------------------------------------
 # GAE guarantee regressions
 # ---------------------------------------------------------------------------
