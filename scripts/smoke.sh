@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 smoke gate: hot-path lint, unit tests, an end-to-end compress ->
-# container -> verify run, a seeded corruption-fuzz pass over the written
-# archive, the throughput benchmark's retrace-regression gate, the
+# Tier-1 smoke gate: hot-path lint, exception-hygiene lint, unit tests, an
+# end-to-end compress -> container -> verify run, a seeded corruption-fuzz
+# pass over the written archive, a seeded LIVE chaos gate over the streaming
+# pipeline, the throughput benchmark's retrace-regression gate, the
 # stream-vs-batch parity gate, and the retrace-budget sweep.
 # Everything here must stay green; run before merging.
 set -euo pipefail
@@ -10,7 +11,7 @@ export PYTHONPATH=src
 
 OUT="${TMPDIR:-/tmp}/smoke_archive.rba"
 
-echo "== 1/7 hot-path jit lint =="
+echo "== 1/9 hot-path jit lint =="
 # Inline jax.jit() wrappers in core hot paths discard the trace cache and
 # retrace per call — all jitted programs must go through core/exec.py's
 # persistent cache (see docs/PERF.md).
@@ -23,28 +24,46 @@ if grep -rn 'jax\.jit(' src/repro/core/ src/repro/stream/ --include='*.py' \
     exit 1
 fi
 
-echo "== 2/7 unit tests =="
+echo "== 2/9 stream exception-hygiene lint =="
+# Broad excepts in the streaming pipeline swallow the typed fault-tolerance
+# ladder (TransientStageError / deadline / quarantine).  The ONLY allowed
+# broad-except sites are the designated retry boundaries, marked with a
+# '# retry-boundary' comment on the except line.
+if grep -rn -E 'except (BaseException|Exception)\b' src/repro/stream/ \
+        --include='*.py' | grep -v '# retry-boundary'; then
+    echo "FAIL: bare 'except Exception'/'except BaseException' in" \
+         "src/repro/stream/ outside a designated '# retry-boundary'" >&2
+    exit 1
+fi
+
+echo "== 3/9 unit tests =="
 python -m pytest -x -q
 
-echo "== 3/7 end-to-end compress + container verify =="
+echo "== 4/9 end-to-end compress + container verify =="
 python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
     --epochs-scale 0.25 --chunk-hyperblocks 32 --out "$OUT" --verify
 
-echo "== 4/7 corruption fuzz (seeded) =="
+echo "== 5/9 corruption fuzz (seeded) =="
 python -m repro.runtime.faultinject "$OUT" --trials 64 --seed 0
 
-echo "== 5/7 throughput bench (smoke: retrace gate) =="
+echo "== 6/9 live chaos gate (seeded) =="
+# Inject transient faults, poison stripes, and stage hangs into a running
+# streaming pipeline; assert no deadlock, per-seed determinism, chunk
+# byte-identity-or-lossless-fallback, and partial salvageability.
+python -m repro.runtime.chaosinject --seed 0
+
+echo "== 7/9 throughput bench (smoke: retrace gate) =="
 python benchmarks/bench_pipeline_throughput.py --smoke \
     --out "${TMPDIR:-/tmp}/BENCH_pipeline_smoke.json"
 
-echo "== 6/7 stream-vs-batch gate (byte-identical sections + overlap) =="
+echo "== 8/9 stream-vs-batch gate (byte-identical sections + overlap) =="
 # Same input => the streamed container must be byte-identical to the batch
 # serialization (identical payload sections AND identical compressed_bytes),
 # with measured device/host overlap > 0.  See docs/STREAMING.md.
 python benchmarks/bench_stream_overlap.py --smoke \
     --out "${TMPDIR:-/tmp}/BENCH_stream_smoke.json"
 
-echo "== 7/7 retrace-budget sweep =="
+echo "== 9/9 retrace-budget sweep =="
 # Trace count over the (n_hyperblocks, bae_stages) sweep must equal the
 # distinct-shape count — streaming adds zero traces over batch.
 python benchmarks/bench_retrace_sweep.py

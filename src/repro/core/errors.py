@@ -29,6 +29,36 @@ class MalformedStream(ArchiveError):
     out-of-range indices, count mismatches, undecodable prefix, ...)."""
 
 
+class TransientStageError(Exception):
+    """A pipeline-stage failure presumed recoverable by retrying the SAME
+    item on the SAME stage (worker-pool hiccup, transient ``OSError`` from
+    the sink, injected chaos).  The streaming scheduler's ``RetryPolicy``
+    retries these with seeded exponential backoff; anything else is a
+    permanent failure and goes straight to failover/quarantine.
+
+    Wrap the underlying cause with ``raise TransientStageError(...) from e``
+    so diagnostics keep the original traceback.
+    """
+
+
+class StageDeadlineExceeded(TransientStageError):
+    """A stage worker blew past its per-item deadline (hung device call,
+    stuck host coder).  The watchdog abandons the attempt — the hung call
+    keeps running on a discarded thread, its result is ignored — and the
+    scheduler treats the item as transiently failed: retry, then quarantine.
+    Subclasses ``TransientStageError`` because hangs are usually stragglers,
+    not poison.
+    """
+
+    def __init__(self, stage: str, item: int, deadline_s: float):
+        self.stage = str(stage)
+        self.item = int(item)
+        self.deadline_s = float(deadline_s)
+        super().__init__(
+            f"stage {stage!r} item {item}: no result within the "
+            f"{deadline_s:g}s deadline — attempt abandoned by the watchdog")
+
+
 class GuaranteeUnsatisfiable(Exception):
     """The GAE encoder could not bring a block's l2 error under ``tau``.
 

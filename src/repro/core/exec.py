@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import bae as bae_mod
 from repro.core import hbae as hbae_mod
+from repro.core.errors import TransientStageError
 from repro.core.quantization import dequantize, quantize
 
 Array = jax.Array
@@ -244,10 +245,36 @@ def _pool() -> ThreadPoolExecutor:
         return _POOL
 
 
+def reset_pool() -> None:
+    """Tear down the shared codec pool; the next submission lazily rebuilds
+    it.  Used by tests/chaos to emulate losing the host worker pool."""
+    global _POOL
+    with _POOL_LOCK:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False, cancel_futures=True)
+        _POOL = None
+
+
 def pool_submit(fn: Callable, *args, **kwargs) -> Future:
     """Submit one call onto the shared codec pool (the streaming scheduler's
-    host-encode stage rides the same workers as ``map_parallel``)."""
-    return _pool().submit(fn, *args, **kwargs)
+    host-encode stage rides the same workers as ``map_parallel``).
+
+    Resilient to a torn-down pool: a submission refused because the executor
+    was shut down rebuilds the pool once and resubmits; a second refusal
+    surfaces as ``TransientStageError`` so the streaming retry ladder (not
+    the caller) owns the failure.
+    """
+    global _POOL
+    try:
+        return _pool().submit(fn, *args, **kwargs)
+    except RuntimeError:
+        with _POOL_LOCK:
+            _POOL = None
+        try:
+            return _pool().submit(fn, *args, **kwargs)
+        except RuntimeError as e:
+            raise TransientStageError(
+                f"codec pool rejected submission: {e}") from e
 
 
 def map_parallel(fn: Callable, items: Iterable) -> list:
@@ -267,7 +294,7 @@ def map_parallel(fn: Callable, items: Iterable) -> list:
     items = list(items)
     if len(items) <= 1 or codec_workers() <= 1:
         return [fn(x) for x in items]
-    futures = [_pool().submit(fn, x) for x in items]
+    futures = [pool_submit(fn, x) for x in items]
     results: list = []
     first_err: Optional[BaseException] = None
     for f in futures:

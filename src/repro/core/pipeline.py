@@ -62,14 +62,22 @@ class CompressorConfig:
 @dataclasses.dataclass
 class ArchiveChunk:
     """One hyper-block stripe: every stream needed to decode hyper-blocks
-    ``[hb_start, hb_start + n_hyperblocks)`` independently of other chunks."""
+    ``[hb_start, hb_start + n_hyperblocks)`` independently of other chunks.
+
+    A non-empty ``verbatim_blob`` marks a QUARANTINED stripe: the learned
+    encoder could not ship it (exhausted retries or an unsatisfiable
+    guarantee), so the payload is the deflate-packed raw float32 stripe
+    itself — losslessly decodable, hence trivially within any tau — and all
+    latent/GAE streams are absent (``hb_stream is None``).
+    """
     hb_start: int
     n_hyperblocks: int
-    hb_stream: entropy.HuffmanStream
+    hb_stream: Optional[entropy.HuffmanStream]
     bae_streams: list[entropy.HuffmanStream]
     gae_coeff_stream: Optional[entropy.HuffmanStream]
     gae_index_blob: bytes
     gae_binexp_blob: bytes
+    verbatim_blob: bytes = b""
 
 
 @dataclasses.dataclass
@@ -89,6 +97,11 @@ class Archive:
     _size_cache: Optional[int] = dataclasses.field(
         default=None, repr=False, compare=False)
 
+    def verbatim_chunks(self) -> list[int]:
+        """Indices of quarantined (lossless verbatim-fallback) chunks."""
+        return [i for i, c in enumerate(self.chunks)
+                if c is not None and c.verbatim_blob]
+
     def compressed_bytes(self) -> int:
         """Honest on-disk cost: the exact size of the serialized container
         (magic, section table, digests, framing — everything).  Computed from
@@ -105,6 +118,12 @@ class Archive:
 
     def compression_ratio(self, include_model_bytes: int = 0) -> float:
         return (self.n_values * 4) / (self.compressed_bytes() + include_model_bytes)
+
+
+@dataclasses.dataclass
+class _VerbatimStripe:
+    """Decoded form of a quarantined chunk: the raw hyper-blocks."""
+    data: np.ndarray
 
 
 MODEL_FORMAT = "repro-compressor-v2"
@@ -322,6 +341,32 @@ class HierarchicalCompressor:
             gae_coeff_stream=coeff_stream, gae_index_blob=index_blob,
             gae_binexp_blob=binexp_blob)
 
+    def encode_stripe_verbatim(self, hb_start: int,
+                               stripe: np.ndarray) -> ArchiveChunk:
+        """Guaranteed-bound fallback for a quarantined stripe: ship the raw
+        float32 values (deflate-packed).  Lossless, so the per-block l2
+        error is exactly 0 <= tau for any tau; costs compression ratio on
+        this stripe only.  Decoded by ``decode_stripe_verbatim``."""
+        raw = np.ascontiguousarray(stripe, dtype="<f4").tobytes()
+        return ArchiveChunk(
+            hb_start=int(hb_start), n_hyperblocks=int(stripe.shape[0]),
+            hb_stream=None, bae_streams=[], gae_coeff_stream=None,
+            gae_index_blob=b"", gae_binexp_blob=b"",
+            verbatim_blob=entropy.zlib_pack(raw))
+
+    def decode_stripe_verbatim(self, chunk: ArchiveChunk) -> np.ndarray:
+        """Inverse of ``encode_stripe_verbatim``; validates the payload size
+        against the chunk's declared hyper-block range."""
+        cfg = self.cfg
+        raw = entropy.zlib_unpack(chunk.verbatim_blob)
+        want = chunk.n_hyperblocks * cfg.k * cfg.block_elems * 4
+        if len(raw) != want:
+            raise MalformedStream(
+                f"verbatim chunk holds {len(raw)} bytes for "
+                f"{chunk.n_hyperblocks} hyper-blocks, expected {want}")
+        return np.frombuffer(raw, "<f4").reshape(
+            chunk.n_hyperblocks, cfg.k, cfg.block_elems).copy()
+
     def prepare_compress(self, hyperblocks: np.ndarray, tau: Optional[float]
                          ) -> int:
         """Shared compress preamble: fit the PCA basis if the caller asked
@@ -378,8 +423,15 @@ class HierarchicalCompressor:
                                  list[gae.GAEBlockCode]]:
         """Decode one chunk's streams into quantized latents + GAE codes,
         cross-checking every count against the model configuration.  Raises
-        a typed ``ArchiveError`` on any inconsistency."""
+        a typed ``ArchiveError`` on any inconsistency.  A quarantined
+        (verbatim) chunk short-circuits to a ``_VerbatimStripe`` carrying the
+        losslessly decoded hyper-blocks."""
         cfg = self.cfg
+        if chunk.verbatim_blob:
+            return _VerbatimStripe(self.decode_stripe_verbatim(chunk))
+        if chunk.hb_stream is None:
+            raise MalformedStream("chunk has neither latent streams nor a "
+                                  "verbatim payload")
         n_hb, k, d = chunk.n_hyperblocks, cfg.k, cfg.block_elems
         want_hb = n_hb * cfg.hb_latent
         if chunk.hb_stream.count != want_hb:
@@ -465,6 +517,7 @@ class HierarchicalCompressor:
         q_lbs = [np.zeros((n * k, cfg.bae_latent), np.int64)
                  for _ in self.bae_params]
         gae_codes: dict[int, gae.GAEBlockCode] = {}   # global gae-block index
+        verbatim_spans: list[tuple[int, int, np.ndarray]] = []
         d_gae = cfg.gae_block_elems or d
         gae_per_hb = (k * d) // d_gae if archive.gae_dim else 0
 
@@ -509,6 +562,13 @@ class HierarchicalCompressor:
                     n_hyperblocks=chunk.n_hyperblocks, section="decode",
                     error=repr(result)))
                 continue
+            if isinstance(result, _VerbatimStripe):
+                # quarantined stripe: raw values land after the AE backend
+                # runs (its latent rows stay zero; no GAE codes exist here)
+                verbatim_spans.append((chunk.hb_start,
+                                       chunk.hb_start + chunk.n_hyperblocks,
+                                       result.data))
+                continue
             c_lh, c_lbs, c_codes = result
             s, e = chunk.hb_start, chunk.hb_start + chunk.n_hyperblocks
             q_lh[s:e] = c_lh
@@ -537,6 +597,8 @@ class HierarchicalCompressor:
                                             cfg.gae_bin)
                 r_gae[idxs] = sub
                 recon = self._gae_unview(r_gae, recon.shape)
+        for s, e, data in verbatim_spans:
+            recon[s:e] = data
         if strict:
             return recon
         return recon, report

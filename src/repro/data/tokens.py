@@ -66,7 +66,15 @@ class SyntheticCorpus:
 
 
 class PrefetchIterator:
-    """Threaded prefetch (depth >= 2) over ``batch_at`` starting at ``step``."""
+    """Threaded prefetch (depth >= 2) over ``batch_at`` starting at ``step``.
+
+    A worker-thread crash (corrupt shard, OOM in ``batch_at``) is re-raised
+    from ``__next__`` on the consumer thread — an error sentinel rides the
+    queue, so the consumer never blocks forever on a dead producer.
+    ``close()`` joins the worker.
+    """
+
+    _ERR = object()      # queue sentinel: payload is the worker's exception
 
     def __init__(self, corpus: SyntheticCorpus, start_step: int,
                  depth: int = 2):
@@ -74,30 +82,63 @@ class PrefetchIterator:
         self.step = start_step
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self) -> None:
         s = self.step
-        while not self._stop.is_set():
-            batch = self.corpus.batch_at(s)
+        try:
+            while not self._stop.is_set():
+                batch = self.corpus.batch_at(s)
+                while not self._stop.is_set():
+                    try:
+                        self.q.put((s, batch), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                s += 1
+        except BaseException as e:   # propagate to consumer via the queue
+            self._exc = e
             while not self._stop.is_set():
                 try:
-                    self.q.put((s, batch), timeout=0.1)
+                    self.q.put((self._ERR, e), timeout=0.1)
                     break
                 except queue.Full:
                     continue
-            s += 1
 
     def __iter__(self) -> Iterator[dict]:
         return self
 
     def __next__(self) -> dict:
-        _, batch = self.q.get()
-        return batch
+        if self._exc is not None and self.q.empty():
+            raise self._exc
+        while True:
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                tag, batch = self.q.get(timeout=0.5)
+            except queue.Empty:
+                # producer dead without a queued sentinel (e.g. it crashed
+                # while the queue was full and close() drained it)?
+                if not self._thread.is_alive():
+                    if self._exc is not None:
+                        raise self._exc
+                    raise StopIteration
+                continue
+            if tag is self._ERR:
+                raise batch
+            return batch
 
     def close(self) -> None:
+        """Stop and JOIN the worker; safe to call twice."""
         self._stop.set()
+        while True:     # unblock a producer stuck on a full queue
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
 
 
 def make_iterator(cfg: TokenPipelineConfig, start_step: int,

@@ -63,9 +63,23 @@ def main(argv=None) -> int:
                     "--out, chunk sections stream to disk as they finish")
     ap.add_argument("--queue-depth", type=int, default=2,
                     help="--stream inter-stage queue bound (backpressure)")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="--stream fault tolerance: per-item transient-"
+                    "failure retries (seeded backoff); enables the "
+                    "quarantine fallback for permanently failing stripes")
+    ap.add_argument("--stage-deadline", type=float, default=None,
+                    help="--stream per-attempt watchdog deadline in seconds "
+                    "for the compute stages (implies --retries)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="--stream chaos drill: inject seeded transient "
+                    "faults into the live pipeline (implies fault "
+                    "tolerance); the run must still honor tau")
     args = ap.parse_args(argv)
     if args.verify and not args.out:
         ap.error("--verify requires --out")
+    if (args.retries is not None or args.stage_deadline is not None
+            or args.chaos is not None) and not args.stream:
+        ap.error("--retries/--stage-deadline/--chaos require --stream")
 
     cfg, hyperblocks = synthetic.make_dataset(args.dataset, quick=args.quick,
                                               seed=args.seed,
@@ -82,12 +96,28 @@ def main(argv=None) -> int:
     exec_mod.reset_stage_stats()
     streamed_bytes = 0
     if args.stream:
-        from repro.stream import stream_compress
+        from repro.stream import FaultTolerance, RetryPolicy, stream_compress
+        ft = None
+        chaos = None
+        if (args.retries is not None or args.stage_deadline is not None
+                or args.chaos is not None):
+            ft = FaultTolerance(
+                retry=RetryPolicy(
+                    max_retries=args.retries if args.retries is not None
+                    else 3,
+                    seed=args.chaos if args.chaos is not None else args.seed),
+                deadline_s=args.stage_deadline, quarantine=True)
+        if args.chaos is not None:
+            from repro.runtime.chaosinject import ChaosInjector, ChaosSpec
+            chaos = ChaosInjector(ChaosSpec(seed=args.chaos,
+                                            transient_rate=0.25,
+                                            permanent_rate=0.05))
         try:
             result = stream_compress(
                 comp, hyperblocks, tau=args.tau,
                 chunk_hyperblocks=args.chunk_hyperblocks,
-                out_path=args.out or None, queue_depth=args.queue_depth)
+                out_path=args.out or None, queue_depth=args.queue_depth,
+                fault_tolerance=ft, chaos=chaos)
         except OSError as e:
             print(f"ERROR: streaming write failed: {e}", file=sys.stderr)
             return 3
@@ -97,6 +127,18 @@ def main(argv=None) -> int:
               f"device/host overlap {s.overlap_s:.2f}s "
               f"({s.overlap_efficiency() * 100:.0f}% of wall), "
               f"queue high-water {s.queue_high_water}")
+        if ft is not None:
+            print(f"fault tolerance: {s.total_retries()} retries "
+                  f"{dict(s.retries)}, deadline hits "
+                  f"{dict(s.deadline_hits)}, failovers {dict(s.failovers)}")
+        if chaos is not None:
+            print(f"chaos injected: {chaos.injected}")
+        if result.quarantined:
+            print(f"QUARANTINED {len(result.quarantined)} chunk(s) "
+                  f"{result.quarantined}: re-encoded as lossless verbatim "
+                  f"fallback (tau holds trivially)")
+            for ci in result.quarantined:
+                print(f"  chunk {ci}: {result.quarantine_reasons.get(ci, '?')}")
     else:
         archive = comp.compress(hyperblocks, tau=args.tau,
                                 chunk_hyperblocks=args.chunk_hyperblocks)

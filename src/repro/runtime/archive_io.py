@@ -169,9 +169,17 @@ def _unpack_stream(r: _Reader) -> Optional[entropy.HuffmanStream]:
 
 _FLAG_GAE = 1
 _FLAG_GAE_COEFFS = 2
+_FLAG_VERBATIM = 4   # quarantine fallback: deflate-packed raw float32 stripe
 
 
 def _pack_chunk(c: ArchiveChunk) -> bytes:
+    if c.verbatim_blob:
+        # quarantined stripe: the payload is the stripe itself (lossless),
+        # no latent/GAE streams exist
+        return b"".join([
+            struct.pack("<IIBB", c.hb_start, c.n_hyperblocks, 0,
+                        _FLAG_VERBATIM),
+            struct.pack("<Q", len(c.verbatim_blob)), c.verbatim_blob])
     flags = 0
     if c.gae_index_blob:
         flags |= _FLAG_GAE
@@ -199,6 +207,21 @@ def _unpack_chunk(blob: bytes, name: str) -> ArchiveChunk:
     flags = r.u8()
     if n_hb == 0:
         raise MalformedStream(f"{name}: empty chunk")
+    if flags & _FLAG_VERBATIM:
+        if flags != _FLAG_VERBATIM or n_bae != 0:
+            raise MalformedStream(
+                f"{name}: verbatim chunk with conflicting flags={flags} "
+                f"n_bae={n_bae}")
+        verbatim = r.take(r.u64())
+        if not verbatim:
+            raise MalformedStream(f"{name}: empty verbatim payload")
+        if not r.done():
+            raise MalformedStream(
+                f"{name}: {len(blob) - r.off} trailing bytes")
+        return ArchiveChunk(hb_start=hb_start, n_hyperblocks=n_hb,
+                            hb_stream=None, bae_streams=[],
+                            gae_coeff_stream=None, gae_index_blob=b"",
+                            gae_binexp_blob=b"", verbatim_blob=verbatim)
     hb_stream = _unpack_stream(r)
     if hb_stream is None:
         raise MalformedStream(f"{name}: missing hyper-block latent stream")
@@ -284,6 +307,11 @@ def pack_chunk_section(c: ArchiveChunk) -> bytes:
     return _pack_chunk(c)
 
 
+def unpack_chunk_section(blob: bytes, name: str = "chunk") -> ArchiveChunk:
+    """Public alias of the chunk section framing decoder (typed errors)."""
+    return _unpack_chunk(blob, name)
+
+
 def chunk_section_size(c: ArchiveChunk) -> int:
     """Exact ``len(pack_chunk_section(c))`` from framing arithmetic (no bytes
     built) — the streaming writer's span precomputation."""
@@ -320,6 +348,8 @@ def _stream_size(s: Optional[entropy.HuffmanStream]) -> int:
 
 def _chunk_size(c: ArchiveChunk) -> int:
     """len(_pack_chunk(c)) from framing arithmetic, no bytes built."""
+    if c.verbatim_blob:
+        return 10 + 8 + len(c.verbatim_blob)
     size = 10 + _stream_size(c.hb_stream)
     size += sum(_stream_size(s) for s in c.bae_streams)
     if c.gae_index_blob:

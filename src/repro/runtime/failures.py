@@ -101,11 +101,17 @@ class ResilientRunner:
         retries = 0
         end = start_step + num_steps
         while step < end and not self._preempted:
-            batch = next(data)
             t0 = time.monotonic()
             try:
+                # next(data) INSIDE the recovery try: a crashing data
+                # iterator (e.g. a prefetch worker death propagated by
+                # PrefetchIterator) counts as a step failure and goes
+                # through restore + iterator rebuild, not up the stack.
+                batch = next(data)
                 new_state, metrics = self.step_fn(state, batch)
                 loss = float(jax.device_get(metrics["loss"]))
+            except StopIteration:                        # exhausted, not failed
+                raise
             except Exception as e:                       # crash / device loss
                 retries += 1
                 self.on_event("failure", {"step": step, "error": repr(e),

@@ -129,23 +129,63 @@ def check_containment(data: bytes, *, trials: int = 32, seed: int = 0,
     return FuzzResult(trials=out)
 
 
+def check_partial_containment(data: bytes, *, trials: int = 32, seed: int = 0,
+                              decode: Optional[Callable] = None) -> FuzzResult:
+    """Fuzz the streaming ``.partial`` salvage path.
+
+    A ``<path>.partial`` left by an aborted ``StreamingArchiveWriter`` is not
+    a valid container (placeholder table entries never verify), so the strict
+    leg of ``check_containment`` does not apply.  The contract here is
+    tolerant-read only: every corruption of a partial must yield either a
+    damage-scoped archive (``survived``) or a typed ``ArchiveError``
+    (``detected``) — never a raw ``struct``/``zlib``/``IndexError`` escape.
+    """
+    out: list[Trial] = []
+    for t in range(trials):
+        rng = np.random.default_rng(seed * 100003 + t)
+        kind = CORRUPTION_KINDS[t % len(CORRUPTION_KINDS)]
+        bad = corrupt(data, kind, rng) if t else data   # trial 0: as-is
+        kind = kind if t else "as_left_on_disk"
+        try:
+            archive = archive_io.deserialize_archive(bad, strict=False)
+            if decode is not None:
+                decode(archive)
+            out.append(Trial(kind, "survived",
+                             f"{len(archive.chunk_errors)} chunks damaged"))
+        except ArchiveError as e:
+            out.append(Trial(kind, "detected", type(e).__name__))
+        except Exception as e:
+            out.append(Trial(kind, "escaped", f"tolerant: {e!r}"))
+    return FuzzResult(trials=out)
+
+
 def main(argv: Optional[list[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="seeded corruption-fuzz a .rba archive container")
-    ap.add_argument("archive", help="path to a valid .rba container")
+    ap.add_argument("archive", help="path to a valid .rba container "
+                                    "(or a .partial with --partial)")
     ap.add_argument("--trials", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--partial", action="store_true",
+                    help="treat the input as a streaming-writer .partial: "
+                         "skip the strict-validity precheck and fuzz the "
+                         "tolerant salvage path only")
     args = ap.parse_args(argv)
     try:
         with open(args.archive, "rb") as f:
             data = f.read()
-        # the corpus must start from a valid container
-        archive_io.deserialize_archive(data, strict=True)
+        if not args.partial:
+            # the corpus must start from a valid container
+            archive_io.deserialize_archive(data, strict=True)
     except (OSError, ArchiveError) as e:
         print(f"error: {args.archive}: not a valid container: {e}",
               file=sys.stderr)
         return 2
-    result = check_containment(data, trials=args.trials, seed=args.seed)
+    if args.partial:
+        result = check_partial_containment(data, trials=args.trials,
+                                           seed=args.seed)
+    else:
+        result = check_containment(data, trials=args.trials, seed=args.seed)
     print(result.summary())
     if not result.ok:
         print("FAIL: corruption escaped the typed-error contract",

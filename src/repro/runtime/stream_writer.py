@@ -102,30 +102,58 @@ class StreamingArchiveWriter:
 
     def append(self, index: int, chunk: ArchiveChunk) -> None:
         """Record chunk ``index``; sections reach disk strictly in index
-        order (out-of-order arrivals wait in the reorder buffer)."""
+        order (out-of-order arrivals wait in the reorder buffer).
+
+        IDEMPOTENT under retry: re-appending an index with a byte-identical
+        section is a no-op (it re-attempts the drain, so a sink stage retry
+        after a transient disk error makes progress instead of tripping the
+        double-append guard).  Re-appending an index with DIFFERENT bytes is
+        still a protocol error.
+        """
         self._check_open()
         if not 0 <= index < len(self.spans):
             raise WriterStateError(
                 f"chunk index {index} outside [0, {len(self.spans)})")
-        if index in self._seen:
-            raise WriterStateError(f"chunk {index} appended twice")
         start, n_hb = self.spans[index]
         if chunk.hb_start != start or chunk.n_hyperblocks != n_hb:
             raise WriterStateError(
                 f"chunk {index} covers [{chunk.hb_start}, "
                 f"+{chunk.n_hyperblocks}], span table says [{start}, +{n_hb}]")
-        self._seen.add(index)
-        self._pending[index] = archive_io.pack_chunk_section(chunk)
+        blob = archive_io.pack_chunk_section(chunk)
+        if index in self._seen:
+            if index in self._pending:
+                if self._pending[index] != blob:
+                    raise WriterStateError(
+                        f"chunk {index} appended twice with different bytes")
+            else:   # already durable: identical re-append is a no-op
+                ent = self._entries[1 + index]
+                if ent[3] != zlib.crc32(blob) or \
+                        ent[4] != hashlib.sha256(blob).digest():
+                    raise WriterStateError(
+                        f"chunk {index} appended twice with different bytes")
+                return
+        else:
+            self._seen.add(index)
+            self._pending[index] = blob
         exec_mod.counter_max("stream.writer_reorder_depth",
                              len(self._pending))
+        self._drain()
+
+    def _drain(self) -> None:
+        """Flush the in-order prefix of the reorder buffer to disk.
+        Resumable: each section is committed (entry patched, tail advanced,
+        buffer popped) only after its bytes are fully written, so an
+        ``OSError`` mid-write leaves the writer state consistent and a
+        retried ``append`` re-attempts the same section at the same offset."""
         drained = 0
         while self._next in self._pending:
-            blob = self._pending.pop(self._next)
+            blob = self._pending[self._next]
             self._f.seek(self._head_len + self._tail)
             self._f.write(blob)
             self._entries[1 + self._next] = (
                 archive_io.chunk_section_name(self._next), self._tail,
                 len(blob), zlib.crc32(blob), hashlib.sha256(blob).digest())
+            self._pending.pop(self._next)
             self._tail += len(blob)
             self._next += 1
             drained += 1

@@ -11,9 +11,11 @@ finished chunk sections stream to disk through
 See docs/STREAMING.md for the scheduler model and queue/backpressure
 semantics.
 """
-from repro.stream.compress import StreamResult, stream_compress
-from repro.stream.scheduler import (StageSpec, StageGraph, StreamScheduler,
-                                    StreamStats)
+from repro.stream.compress import (FaultTolerance, StreamResult,
+                                   stream_compress)
+from repro.stream.scheduler import (RetryPolicy, StageSpec, StageGraph,
+                                    StreamScheduler, StreamStats)
 
-__all__ = ["StageSpec", "StageGraph", "StreamScheduler", "StreamStats",
-           "StreamResult", "stream_compress"]
+__all__ = ["FaultTolerance", "RetryPolicy", "StageSpec", "StageGraph",
+           "StreamScheduler", "StreamStats", "StreamResult",
+           "stream_compress"]

@@ -27,6 +27,14 @@ Stage graph (one stripe = one archive chunk flows left to right)::
 On any stage failure the scheduler drains, the writer is aborted — leaving
 ``<out_path>.partial`` on disk for ``read_archive(strict=False)`` salvage —
 and the lowest-index stage error is re-raised.
+
+With a ``FaultTolerance`` policy the run instead degrades gracefully:
+transient stage failures retry with seeded backoff, hung attempts are
+abandoned at the stage deadline, and a stripe that permanently fails (or
+raises ``GuaranteeUnsatisfiable``) is QUARANTINED — re-encoded as a lossless
+verbatim fallback chunk, so the finalized archive still contains every
+hyper-block within tau.  Quarantined chunk indices surface in
+``StreamResult.quarantined`` / ``StreamStats``.
 """
 from __future__ import annotations
 
@@ -36,10 +44,36 @@ from typing import Optional
 import numpy as np
 
 from repro.core import exec as exec_mod
+from repro.core.errors import TransientStageError
 from repro.core.pipeline import Archive, ArchiveChunk, HierarchicalCompressor
 from repro.runtime.stream_writer import StreamingArchiveWriter
-from repro.stream.scheduler import StageGraph, StageSpec, StreamScheduler, \
-    StreamStats
+from repro.stream.scheduler import RetryPolicy, StageGraph, StageSpec, \
+    StreamScheduler, StreamStats
+
+
+@dataclasses.dataclass
+class FaultTolerance:
+    """Fault-tolerance posture for one streaming run.
+
+    * ``retry`` applies per item to the dispatch/transfer/host_encode stages
+      (and, with OSErrors classified transient, to the sink).
+    * ``deadline_s`` arms the per-attempt watchdog on the compute stages
+      (never the sink: an abandoned half-finished disk write racing its own
+      retry is worse than blocking on it).
+    * ``quarantine=True`` re-encodes a permanently-failed stripe as a
+      lossless verbatim chunk instead of failing the run.
+    """
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    deadline_s: Optional[float] = None
+    quarantine: bool = True
+
+
+class _Quarantined:
+    """In-flight marker: this stripe permanently failed an upstream stage
+    and rides the rest of the pipeline as a quarantine order."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 @dataclasses.dataclass
@@ -48,13 +82,17 @@ class StreamResult:
     archive: Archive
     stats: StreamStats
     bytes_written: int = 0        # 0 when no out_path was given
+    quarantined: list = dataclasses.field(default_factory=list)
+    quarantine_reasons: dict = dataclasses.field(default_factory=dict)
 
 
 def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
                     tau: Optional[float] = None, chunk_hyperblocks: int = 64,
                     out_path: Optional[str] = None, *, queue_depth: int = 2,
                     host_workers: Optional[int] = None,
-                    fsync_every: bool = False) -> StreamResult:
+                    fsync_every: bool = False,
+                    fault_tolerance: Optional[FaultTolerance] = None,
+                    chaos=None) -> StreamResult:
     """Pipelined compress of ``hyperblocks``; byte-identical chunks to
     ``comp.compress(hyperblocks, tau, chunk_hyperblocks)``.
 
@@ -63,6 +101,14 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
     finalized to ``out_path`` on success; on failure the partial is kept for
     tolerant salvage.  Without ``out_path`` only the in-memory ``Archive`` is
     produced.
+
+    ``fault_tolerance=None`` keeps the historical fail-fast semantics (any
+    stage error aborts the run).  With a ``FaultTolerance``, transient
+    failures retry, hung attempts hit the stage deadline, and permanently
+    failing stripes are quarantined as lossless verbatim chunks (when
+    ``quarantine`` is enabled) so the run still finalizes with every
+    hyper-block within tau.  ``chaos`` is a fault injector forwarded to the
+    scheduler (``repro.runtime.chaosinject``).
     """
     cfg = comp.cfg
     n = hyperblocks.shape[0]
@@ -70,6 +116,7 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
     spans = comp.stripe_spans(n, chunk_hyperblocks, with_gae=tau is not None)
     width = comp._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
     chunks: list[Optional[ArchiveChunk]] = [None] * len(spans)
+    quarantine_reasons: dict[int, str] = {}
 
     writer: Optional[StreamingArchiveWriter] = None
     if out_path is not None:
@@ -85,11 +132,21 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
             hyperblocks[start:start + n_hb], cfg.hb_bin, cfg.bae_bin)
         return span, handles
 
-    def transfer(i: int, payload: tuple) -> tuple:
+    def transfer(i: int, payload) -> tuple:
+        if isinstance(payload, _Quarantined):
+            return payload                     # ride through to host_encode
         span, handles = payload
         return span, exec_mod.fetch_compress_stage(handles)
 
-    def host_encode(i: int, payload: tuple) -> ArchiveChunk:
+    def quarantine_encode(i: int, exc: BaseException) -> ArchiveChunk:
+        start, n_hb = spans[i]
+        quarantine_reasons[i] = repr(exc)
+        return comp.encode_stripe_verbatim(
+            start, hyperblocks[start:start + n_hb])
+
+    def host_encode(i: int, payload) -> ArchiveChunk:
+        if isinstance(payload, _Quarantined):
+            return quarantine_encode(i, payload.exc)
         (start, n_hb), (q_lh, q_lbs, recon) = payload
         # ride the shared codec pool — same workers as batch map_parallel
         return exec_mod.pool_submit(
@@ -100,22 +157,40 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
     def sink(i: int, chunk: ArchiveChunk) -> int:
         chunks[i] = chunk
         if writer is not None:
-            writer.append(i, chunk)
+            try:
+                writer.append(i, chunk)
+            except OSError as e:
+                # transient disk errors ride the retry ladder; append is
+                # idempotent under retry (byte-identical re-append)
+                raise TransientStageError(
+                    f"sink append of chunk {i} failed: {e}") from e
         return i
+
+    ft = fault_tolerance
+    retry = ft.retry if ft is not None else None
+    deadline = ft.deadline_s if ft is not None else None
+    fallback = (lambda i, payload, exc: _Quarantined(exc)) \
+        if ft is not None and ft.quarantine else None
+    encode_fallback = (lambda i, payload, exc: quarantine_encode(i, exc)) \
+        if ft is not None and ft.quarantine else None
 
     workers = host_workers if host_workers else exec_mod.codec_workers()
     graph = StageGraph([
-        StageSpec("dispatch", dispatch, workers=1, queue_depth=queue_depth),
-        StageSpec("transfer", transfer, workers=1, queue_depth=queue_depth),
+        StageSpec("dispatch", dispatch, workers=1, queue_depth=queue_depth,
+                  retry=retry, deadline_s=deadline, fallback=fallback),
+        StageSpec("transfer", transfer, workers=1, queue_depth=queue_depth,
+                  retry=retry, deadline_s=deadline, fallback=fallback),
         StageSpec("host_encode", host_encode, workers=max(1, workers),
-                  queue_depth=max(queue_depth, workers)),
-        StageSpec("sink", sink, workers=1, queue_depth=1),
+                  queue_depth=max(queue_depth, workers),
+                  retry=retry, deadline_s=deadline,
+                  fallback=encode_fallback),
+        StageSpec("sink", sink, workers=1, queue_depth=1, retry=retry),
     ])
 
     bytes_written = 0
     try:
-        _, stats = StreamScheduler(graph).run(spans)
-    except BaseException:
+        _, stats = StreamScheduler(graph, chaos=chaos).run(spans)
+    except BaseException:      # retry-boundary: abort the writer, re-raise
         if writer is not None:
             writer.abort()     # keep <out_path>.partial for tolerant salvage
         raise
@@ -124,5 +199,11 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
 
     archive = Archive(n_hyperblocks=n, n_values=hyperblocks.size,
                       chunk_hyperblocks=width, gae_dim=gae_dim, chunks=chunks)
+    quarantined = archive.verbatim_chunks()
+    stats.quarantined = list(quarantined)
+    if quarantined:
+        exec_mod.counter_add("stream.quarantined_chunks", len(quarantined))
     return StreamResult(archive=archive, stats=stats,
-                        bytes_written=bytes_written)
+                        bytes_written=bytes_written,
+                        quarantined=quarantined,
+                        quarantine_reasons=dict(quarantine_reasons))

@@ -196,8 +196,17 @@ def test_writer_protocol_errors(comp_hb, tmp_path):
                                chunk_hyperblocks=batch.chunk_hyperblocks,
                                gae_dim=batch.gae_dim, spans=spans)
     w.append(0, batch.chunks[0])
-    with pytest.raises(WriterStateError, match="twice"):
-        w.append(0, batch.chunks[0])
+    # byte-identical re-append is a no-op (idempotent under sink retry) ...
+    w.append(0, batch.chunks[0])
+    assert w.appended() == 1
+    # ... but different bytes for an already-seen slot is still a protocol
+    # error (same span, verbatim re-encoding => different section bytes)
+    tampered = comp.encode_stripe_verbatim(
+        batch.chunks[0].hb_start, hb[:batch.chunks[0].n_hyperblocks])
+    assert archive_io.pack_chunk_section(tampered) != \
+        archive_io.pack_chunk_section(batch.chunks[0])
+    with pytest.raises(WriterStateError, match="different bytes"):
+        w.append(0, tampered)
     with pytest.raises(WriterStateError, match="span table"):
         w.append(1, batch.chunks[2])          # wrong hb range for slot 1
     with pytest.raises(WriterStateError, match="outside"):

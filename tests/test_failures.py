@@ -1,10 +1,15 @@
 """ResilientRunner edge cases: retry-budget exhaustion, anomaly rollback,
-cold-restore fallback, and the preemption hook."""
+cold-restore fallback, the preemption hook, data-iterator crash recovery,
+and PrefetchIterator worker-death propagation."""
 from __future__ import annotations
+
+import time
 
 import jax.numpy as jnp
 import pytest
 
+from repro.data.tokens import PrefetchIterator, SyntheticCorpus, \
+    TokenPipelineConfig
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.failures import (ResilientRunner, SimulatedDeviceFailure,
                                     chaos_wrap)
@@ -108,3 +113,77 @@ def test_preemption_checkpoints_and_stops(tmp_path):
     assert mgr.latest_step() == 3
     step, back = mgr.restore()
     assert step == 3 and int(back) == 3
+
+
+def test_data_iterator_crash_counts_as_step_failure(tmp_path):
+    """next(data) raising inside the step loop must ride the recovery path
+    (restore + iterator rebuild), not escape the runner."""
+    crashed = {"done": False}
+
+    def make_iter(start):
+        def gen():
+            s = start
+            while True:
+                if s == 2 and not crashed["done"]:
+                    crashed["done"] = True
+                    raise RuntimeError("prefetch worker died")
+                yield {"i": s}
+                s += 1
+        return iter(gen())
+
+    events = []
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    runner = ResilientRunner(_counting_step, mgr, make_iter, save_every=100,
+                             max_retries=3,
+                             on_event=lambda k, info: events.append((k, info)))
+    state, end = runner.run(jnp.zeros(()), 0, 4)
+    assert end == 4
+    failures = [info for k, info in events if k == "failure"]
+    assert len(failures) == 1
+    assert "prefetch worker died" in failures[0]["error"]
+    assert runner.stats.restores == 1              # recovered, not re-raised
+
+
+def _token_cfg(**kw):
+    return TokenPipelineConfig(vocab=50, seq_len=8, global_batch=4, **kw)
+
+
+def test_prefetch_iterator_propagates_worker_crash():
+    corpus = SyntheticCorpus(_token_cfg())
+    boom = {"n": 0}
+    real = corpus.batch_at
+
+    def crashing(step):
+        boom["n"] += 1
+        if step >= 2:
+            raise ValueError("corrupt shard")
+        return real(step)
+
+    corpus.batch_at = crashing
+    it = PrefetchIterator(corpus, start_step=0, depth=2)
+    try:
+        assert next(it)["tokens"].shape == (4, 8)      # steps 0..1 are fine
+        assert next(it)["tokens"].shape == (4, 8)
+        with pytest.raises(ValueError, match="corrupt shard"):
+            for _ in range(4):                          # must NOT block
+                next(it)
+        # the iterator stays poisoned: the error re-raises, never hangs
+        with pytest.raises(ValueError, match="corrupt shard"):
+            next(it)
+    finally:
+        it.close()
+    assert not it._thread.is_alive()                    # close() joins
+
+
+def test_prefetch_iterator_close_joins_blocked_worker():
+    it = PrefetchIterator(SyntheticCorpus(_token_cfg()), start_step=0,
+                          depth=1)
+    # let the worker fill the queue and block on put()
+    deadline = time.monotonic() + 5.0
+    while it.q.empty() and time.monotonic() < deadline:
+        time.sleep(0.005)
+    it.close()
+    assert not it._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(it)
+    it.close()                                          # idempotent
