@@ -13,6 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import ae_point, dataset, emit, fitted_compressor
+from repro.baselines import codec as codec_mod
 from repro.baselines.block_ae import BlockAEBaseline
 from repro.data.blocks import nrmse, ungroup_hyperblocks
 
@@ -40,9 +41,9 @@ def main(full: bool = False) -> None:
     for latent in ((8, 16, 32, 64) if full else (8, 32)):
         base = BlockAEBaseline(in_dim=blocks.shape[1], latent=latent,
                                epochs=12).fit(blocks, seed=0)
-        recon, nbytes = base.compress(blocks)
+        recon, enc = codec_mod.roundtrip(base.codec(), blocks, base.bin_size)
         emit("fig4.baseline", latent=latent,
-             cr=round(blocks.size * 4 / nbytes, 2),
+             cr=round(blocks.size * 4 / enc.nbytes, 2),
              nrmse=float(nrmse(blocks, recon)))
 
 

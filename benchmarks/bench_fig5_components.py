@@ -7,6 +7,7 @@ full > HBAE > HBAE-woa > Baseline — each component earns its place.
 from __future__ import annotations
 
 from benchmarks.common import ae_point, dataset, emit, fitted_compressor
+from repro.baselines import codec as codec_mod
 from repro.baselines.block_ae import BlockAEBaseline
 from repro.data.blocks import nrmse, ungroup_hyperblocks
 
@@ -25,8 +26,8 @@ def main(full: bool = False) -> None:
     blocks = ungroup_hyperblocks(hb)
     base = BlockAEBaseline(in_dim=blocks.shape[1], latent=16, epochs=12)
     base.fit(blocks, seed=0)
-    recon, nbytes = base.compress(blocks)
-    emit("fig5.baseline", cr=round(blocks.size * 4 / nbytes, 2),
+    recon, enc = codec_mod.roundtrip(base.codec(), blocks, base.bin_size)
+    emit("fig5.baseline", cr=round(blocks.size * 4 / enc.nbytes, 2),
          nrmse=float(nrmse(blocks, recon)))
 
 

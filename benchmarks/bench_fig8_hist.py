@@ -9,7 +9,10 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import dataset, emit, fitted_compressor
-from repro.baselines import szlike, zfplike
+from repro.baselines import codec as codec_mod
+from repro.baselines.szlike import SZLikeCodec
+from repro.baselines.zfplike import ZFPLikeCodec
+from repro.core.options import CompressOptions
 from repro.data.blocks import ungroup_hyperblocks
 
 
@@ -22,19 +25,21 @@ def _quantiles(orig: np.ndarray, rec: np.ndarray) -> dict:
 
 def main(full: bool = False) -> None:
     comp, hb = fitted_compressor("s3d")
-    archive = comp.compress(hb, tau=0.5)
+    archive = comp.compress(hb, options=CompressOptions(tau=0.5))
     ours_rec = comp.decompress(archive)
     ours_cr = archive.compression_ratio()
     emit("fig8.ours", cr=round(ours_cr, 1), **_quantiles(hb, ours_rec))
 
     field = ungroup_hyperblocks(hb)
-    # pick each baseline's eb whose CR is closest to ours
-    for mod, name, key in ((szlike, "szlike", "eb"), (zfplike, "zfplike", "tol")):
+    # pick each baseline's bound whose CR is closest to ours
+    for c, key, name in ((SZLikeCodec(), "eb", "szlike"),
+                         (ZFPLikeCodec(), "tol", "zfplike")):
         best = None
-        for r in mod.compression_curve(field, [0.1, 0.05, 0.02, 0.01, 0.005]):
+        for r in codec_mod.compression_curve(
+                c, field, [0.1, 0.05, 0.02, 0.01, 0.005], bound_key=key):
             if best is None or abs(r["cr"] - ours_cr) < abs(best["cr"] - ours_cr):
                 best = r
-        dec, _ = mod.compress(field, best[key])
+        dec, _ = codec_mod.roundtrip(c, field, best[key])
         emit(f"fig8.{name}", cr=round(best["cr"], 1), **_quantiles(field, dec))
 
 

@@ -1,0 +1,235 @@
+"""Mesh-sharded stage pipeline benchmark: parity, dispatch scaling, timing.
+
+Runs the SAME workload through the single-device fused stage programs and
+the ``shard_map``-sharded ones (hyper-block data axis over a
+``jax.sharding.Mesh``) and records into ``BENCH_shard.json``:
+
+* **parity** (hard gate): the sharded batch archive AND the sharded
+  streaming container are byte-identical to the single-device archive;
+* **retraces** (hard gate): after one warmup pass, re-running both paths
+  triggers zero new traces — the mesh-keyed ``JitCache`` keeps the sharded
+  and unsharded program sets live side by side;
+* **dispatch scaling** (hard gate): with ``N`` shards the sharded encode
+  makes ~1/N as many device dispatches (aligned stripe groups collapse into
+  one ``shard_map`` call each);
+* **timing**: encode wall clock per path.  Virtual CPU devices
+  (``--xla_force_host_platform_device_count``) share the physical cores, so
+  a wall-clock speedup gate is enforced only when the machine has at least
+  as many usable cores as shards — on CI this records honest numbers
+  without failing on hardware that cannot physically go faster.
+
+Device count is frozen at first jax import, so this benchmark force-sets
+``XLA_FLAGS`` at module import time (before jax loads) from ``--devices``:
+
+    PYTHONPATH=src python benchmarks/bench_shard.py            # 4 shards
+    PYTHONPATH=src python benchmarks/bench_shard.py --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def _want_devices(argv) -> int:
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return int(os.environ.get("REPRO_BENCH_SHARD_DEVICES", "4"))
+
+
+DEVICES = _want_devices(sys.argv[1:])
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + f" --xla_force_host_platform_device_count={DEVICES}").strip()
+
+import numpy as np                                              # noqa: E402
+
+import jax                                                      # noqa: E402
+
+from repro.core import CompressorConfig, HierarchicalCompressor  # noqa: E402
+from repro.core import bae as bae_mod                           # noqa: E402
+from repro.core import exec as exec_mod                         # noqa: E402
+from repro.core import hbae as hbae_mod                         # noqa: E402
+from repro.core.options import CompressOptions                  # noqa: E402
+from repro.runtime import archive_io                            # noqa: E402
+from repro.stream import stream_compress                        # noqa: E402
+
+
+def _make_comp(n_hb: int, block_elems: int, seed: int = 0
+               ) -> tuple[HierarchicalCompressor, np.ndarray]:
+    """Random-init compressor: the stage programs run the same compute
+    graph as a trained one, and parity/scaling don't depend on weights."""
+    cfg = CompressorConfig(block_elems=block_elems, k=4, emb=32, hidden=64,
+                           hb_latent=16, bae_hidden=64, bae_latent=8,
+                           gae_block_elems=2 * block_elems,
+                           hb_bin=0.01, bae_bin=0.01, gae_bin=0.02)
+    comp = HierarchicalCompressor(cfg)
+    khb, kb = jax.random.split(jax.random.PRNGKey(seed))
+    comp.hbae_params = hbae_mod.hbae_init(
+        khb, in_dim=cfg.block_elems, k=cfg.k, emb=cfg.emb, hidden=cfg.hidden,
+        latent=cfg.hb_latent, heads=cfg.heads)
+    comp.bae_params = [bae_mod.bae_init(kb, in_dim=cfg.block_elems,
+                                        hidden=cfg.bae_hidden,
+                                        latent=cfg.bae_latent)]
+    rng = np.random.default_rng(seed)
+    hb = 0.1 * rng.standard_normal(
+        (n_hb, cfg.k, cfg.block_elems)).astype(np.float32)
+    comp.fit_basis(hb)
+    return comp, hb
+
+
+def _timed(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload, 1 repeat, parity/retrace/dispatch "
+                    "gates only")
+    ap.add_argument("--devices", type=int, default=DEVICES,
+                    help="virtual device count = mesh shards (must be set "
+                    "before jax initializes; this script handles that)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--tau", type=float, default=0.5)
+    ap.add_argument("--hyperblocks", type=int, default=None,
+                    help="workload size (default: 32 smoke / 128 full)")
+    ap.add_argument("--chunk-hyperblocks", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_shard.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.repeats = 1
+
+    n_dev = len(jax.devices())
+    if n_dev < args.devices:
+        print(f"FAIL: need {args.devices} devices, jax sees {n_dev} "
+              f"(XLA_FLAGS applied too late?)", file=sys.stderr)
+        return 1
+
+    n_hb = args.hyperblocks or (32 if args.smoke else 128)
+    block_elems = 40 if args.smoke else 128
+    comp, hb = _make_comp(n_hb, block_elems, args.seed)
+    print(f"workload: {n_hb} hyper-blocks of (k={hb.shape[1]}, "
+          f"D={hb.shape[2]}) = {hb.size:,} values, {args.devices} shards",
+          file=sys.stderr)
+
+    base_opts = CompressOptions(tau=args.tau,
+                                chunk_hyperblocks=args.chunk_hyperblocks)
+    mesh_opts = base_opts.replace(mesh=args.devices)
+
+    # -- warmup + parity -----------------------------------------------------
+    single = comp.compress(hb, options=base_opts)
+    sharded = comp.compress(hb, options=mesh_opts)
+    blob_single = archive_io.serialize_archive(single)
+    parity_batch = archive_io.serialize_archive(sharded) == blob_single
+
+    tmpdir = tempfile.mkdtemp(prefix="bench_shard_")
+    stream_path = os.path.join(tmpdir, "stream.rba")
+    result = stream_compress(comp, hb, options=mesh_opts,
+                             out_path=stream_path)
+    with open(stream_path, "rb") as f:
+        parity_stream = f.read() == blob_single
+
+    # -- retrace gate --------------------------------------------------------
+    traces_warm = exec_mod.total_retraces()
+    comp.compress(hb, options=base_opts)
+    comp.compress(hb, options=mesh_opts)
+    retrace_delta = exec_mod.total_retraces() - traces_warm
+
+    # -- dispatch scaling ----------------------------------------------------
+    # single-device encode = one device dispatch per stripe; the sharded
+    # path collapses every aligned group of N stripes into ONE shard_map
+    # dispatch (counted by the mesh.sharded_groups counter)
+    n_stripes = -(-n_hb // args.chunk_hyperblocks)
+    exec_mod.reset_stage_stats()
+    comp.compress(hb, options=mesh_opts)
+    cnt = exec_mod.counters()
+    group_dispatches = int(cnt.get("mesh.sharded_groups", 0))
+    expect_groups = (n_hb // args.chunk_hyperblocks) // args.devices
+    tail_dispatches = n_stripes - group_dispatches * args.devices
+    sharded_dispatches = group_dispatches + tail_dispatches
+    single_calls = n_stripes
+    dispatch_ok = (group_dispatches == expect_groups
+                   and int(cnt.get("mesh.shards", 0)) == args.devices
+                   and sharded_dispatches < single_calls)
+
+    # -- timing --------------------------------------------------------------
+    single_s = _timed(lambda: comp.compress(hb, options=base_opts),
+                      args.repeats)
+    sharded_s = _timed(lambda: comp.compress(hb, options=mesh_opts),
+                       args.repeats)
+    speedup = single_s / sharded_s if sharded_s > 0 else 0.0
+    usable = len(os.sched_getaffinity(0)) if hasattr(os, "sched_getaffinity") \
+        else (os.cpu_count() or 1)
+    speedup_gate = usable >= args.devices
+
+    out = {
+        "workload": {"smoke": args.smoke, "hyperblocks": n_hb,
+                     "k": int(hb.shape[1]), "block_elems": int(hb.shape[2]),
+                     "n_values": int(hb.size), "tau": args.tau,
+                     "chunk_hyperblocks": args.chunk_hyperblocks,
+                     "n_stripes": n_stripes, "repeats": args.repeats},
+        "machine": {"cpu_count": os.cpu_count(), "usable_cores": usable,
+                    "devices": n_dev, "shards": args.devices,
+                    "jax_backend": jax.default_backend(),
+                    "speedup_gate_enforced": speedup_gate},
+        "parity": {"batch_byte_identical": parity_batch,
+                   "stream_byte_identical": parity_stream,
+                   "archive_bytes": len(blob_single),
+                   "stream_items": result.stats.n_items},
+        "dispatch": {"single_device_calls": int(single_calls),
+                     "sharded_group_calls": int(group_dispatches),
+                     "sharded_tail_calls": int(tail_dispatches),
+                     "expected_group_calls": int(expect_groups)},
+        "timing": {"single_encode_s": round(single_s, 4),
+                   "sharded_encode_s": round(sharded_s, 4),
+                   "speedup": round(speedup, 3)},
+        "retraces_after_warmup": int(retrace_delta),
+        "retrace_counts": exec_mod.retrace_counts(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"single: {single_s:.3f}s  sharded: {sharded_s:.3f}s  "
+          f"speedup {speedup:.2f}x on {usable} usable core(s)")
+    print(f"parity: batch={parity_batch} stream={parity_stream}")
+    print(f"dispatch: {single_calls} single-device calls -> "
+          f"{group_dispatches} group + {tail_dispatches} tail")
+    print(f"written: {args.out}")
+
+    ok = True
+    if not (parity_batch and parity_stream):
+        print("FAIL: sharded archives are not byte-identical to "
+              "single-device", file=sys.stderr)
+        ok = False
+    if retrace_delta != 0:
+        print(f"FAIL: {retrace_delta} retraces after warmup "
+              f"({exec_mod.retrace_counts()})", file=sys.stderr)
+        ok = False
+    if not dispatch_ok:
+        print(f"FAIL: dispatch scaling broken — {group_dispatches} group "
+              f"calls (expected {expect_groups}), {sharded_dispatches} total "
+              f"vs {single_calls} single-device", file=sys.stderr)
+        ok = False
+    if speedup_gate and speedup < 1.1:
+        print(f"FAIL: speedup {speedup:.2f}x < 1.1x with {usable} usable "
+              f"cores >= {args.devices} shards", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,7 @@ import time
 
 import numpy as np
 
+from repro.core.options import CompressOptions
 from repro.core.pipeline import HierarchicalCompressor
 from repro.data import synthetic
 from repro.data.blocks import nrmse
@@ -60,15 +61,15 @@ def fitted_compressor(name: str, *, hb_latent: int | None = None,
 
 def ae_point(comp: HierarchicalCompressor, hb: np.ndarray) -> dict:
     """AE-only CR/NRMSE (the paper's ablation points exclude GAE):
-    compress(tau=None) = quantized+Huffman latents, no PCA stage."""
-    archive = comp.compress(hb, tau=None)
+    tau=None = quantized+Huffman latents, no PCA stage."""
+    archive = comp.compress(hb, options=CompressOptions(tau=None))
     recon = comp.decompress(archive)
     return {"cr": round(archive.compression_ratio(), 2),
             "nrmse": float(nrmse(hb, recon))}
 
 
 def gae_point(comp: HierarchicalCompressor, hb: np.ndarray, tau: float) -> dict:
-    archive = comp.compress(hb, tau=tau)
+    archive = comp.compress(hb, options=CompressOptions(tau=tau))
     recon = comp.decompress(archive)
     return {"tau": tau, "cr": round(archive.compression_ratio(), 2),
             "nrmse": float(nrmse(hb, recon))}

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 smoke gate: hot-path lint, exception-hygiene lint, unit tests, an
-# end-to-end compress -> container -> verify run, a seeded corruption-fuzz
-# pass over the written archive, a seeded LIVE chaos gate over the streaming
-# pipeline, the throughput benchmark's retrace-regression gate, the
-# stream-vs-batch parity gate, and the retrace-budget sweep.
+# Tier-1 smoke gate: hot-path lint, exception-hygiene lint, options-surface
+# lint, unit tests, an end-to-end compress -> container -> verify run, a
+# seeded corruption-fuzz pass over the written archive, a seeded LIVE chaos
+# gate over the streaming pipeline, the throughput benchmark's
+# retrace-regression gate, the stream-vs-batch parity gate, the
+# retrace-budget sweep, and the multi-device mesh parity gate.
 # Everything here must stay green; run before merging.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,7 +12,7 @@ export PYTHONPATH=src
 
 OUT="${TMPDIR:-/tmp}/smoke_archive.rba"
 
-echo "== 1/9 hot-path jit lint =="
+echo "== 1/11 hot-path jit lint =="
 # Inline jax.jit() wrappers in core hot paths discard the trace cache and
 # retrace per call — all jitted programs must go through core/exec.py's
 # persistent cache (see docs/PERF.md).
@@ -24,7 +25,7 @@ if grep -rn 'jax\.jit(' src/repro/core/ src/repro/stream/ --include='*.py' \
     exit 1
 fi
 
-echo "== 2/9 stream exception-hygiene lint =="
+echo "== 2/11 stream exception-hygiene lint =="
 # Broad excepts in the streaming pipeline swallow the typed fault-tolerance
 # ladder (TransientStageError / deadline / quarantine).  The ONLY allowed
 # broad-except sites are the designated retry boundaries, marked with a
@@ -36,37 +37,64 @@ if grep -rn -E 'except (BaseException|Exception)\b' src/repro/stream/ \
     exit 1
 fi
 
-echo "== 3/9 unit tests =="
+echo "== 3/11 options-surface lint =="
+# The stage-program runners (run_compress_stage* / run_decompress_stage*)
+# are internal to the pipeline: every external entry point must configure a
+# compress through CompressOptions (core/options.py), not by calling the
+# stage programs directly.  Allowed call sites: the exec module itself, the
+# pipeline, the streaming scheduler, and the mesh executor/selfcheck.
+if grep -rn -E 'run_(de)?compress_stage' src/repro/ --include='*.py' \
+        | grep -v 'src/repro/core/exec\.py' \
+        | grep -v 'src/repro/core/pipeline\.py' \
+        | grep -v 'src/repro/stream/compress\.py' \
+        | grep -v 'src/repro/parallel/mesh_exec\.py' \
+        | grep -v 'src/repro/parallel/mesh_check\.py'; then
+    echo "FAIL: stage-program call site outside the pipeline internals" \
+         "(configure compression through repro.core.options.CompressOptions)" >&2
+    exit 1
+fi
+
+echo "== 4/11 unit tests =="
 python -m pytest -x -q
 
-echo "== 4/9 end-to-end compress + container verify =="
+echo "== 5/11 end-to-end compress + container verify =="
 python -m repro.launch.compress --dataset s3d --tau 0.5 --quick \
     --epochs-scale 0.25 --chunk-hyperblocks 32 --out "$OUT" --verify
 
-echo "== 5/9 corruption fuzz (seeded) =="
+echo "== 6/11 corruption fuzz (seeded) =="
 python -m repro.runtime.faultinject "$OUT" --trials 64 --seed 0
 
-echo "== 6/9 live chaos gate (seeded) =="
+echo "== 7/11 live chaos gate (seeded) =="
 # Inject transient faults, poison stripes, and stage hangs into a running
 # streaming pipeline; assert no deadlock, per-seed determinism, chunk
 # byte-identity-or-lossless-fallback, and partial salvageability.
 python -m repro.runtime.chaosinject --seed 0
 
-echo "== 7/9 throughput bench (smoke: retrace gate) =="
+echo "== 8/11 throughput bench (smoke: retrace gate) =="
 python benchmarks/bench_pipeline_throughput.py --smoke \
     --out "${TMPDIR:-/tmp}/BENCH_pipeline_smoke.json"
 
-echo "== 8/9 stream-vs-batch gate (byte-identical sections + overlap) =="
+echo "== 9/11 stream-vs-batch gate (byte-identical sections + overlap) =="
 # Same input => the streamed container must be byte-identical to the batch
 # serialization (identical payload sections AND identical compressed_bytes),
 # with measured device/host overlap > 0.  See docs/STREAMING.md.
 python benchmarks/bench_stream_overlap.py --smoke \
     --out "${TMPDIR:-/tmp}/BENCH_stream_smoke.json"
 
-echo "== 9/9 retrace-budget sweep =="
+echo "== 10/11 retrace-budget sweep =="
 # Trace count over the (n_hyperblocks, bae_stages) sweep must equal the
 # distinct-shape count — streaming adds zero traces over batch.
 python benchmarks/bench_retrace_sweep.py
+
+echo "== 11/11 mesh parity gate (4 virtual devices, subprocess) =="
+# Sharded-vs-single byte identity, psum-consistent PCA, zero retraces, and
+# the dispatch-scaling gate, under XLA_FLAGS-forced virtual devices.  Runs
+# in fresh subprocesses because the device count freezes at first jax
+# import.  See docs/PERF.md (mesh sharding).
+python -m repro.parallel.mesh_check > "${TMPDIR:-/tmp}/mesh_check.json" \
+    || { cat "${TMPDIR:-/tmp}/mesh_check.json" >&2; exit 1; }
+python benchmarks/bench_shard.py --smoke \
+    --out "${TMPDIR:-/tmp}/BENCH_shard_smoke.json"
 
 rm -f "$OUT"
 echo "smoke OK"

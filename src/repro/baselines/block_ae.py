@@ -10,16 +10,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import struct
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.baselines import codec as codec_mod
 from repro.core import entropy
 from repro.core.attention import linear, linear_init
+from repro.core.errors import MalformedStream
 from repro.core.quantization import dequantize, quantize
 from repro.train import optim as optim_mod
+
+_MAGIC = b"BAE1"
 
 Array = jax.Array
 
@@ -103,12 +108,66 @@ class BlockAEBaseline:
     def compress(self, blocks: np.ndarray, quantize_latent: bool = True
                  ) -> tuple[np.ndarray, int]:
         """Returns (reconstruction, compressed_bytes)."""
-        z = np.asarray(jax.jit(block_ae_encode)(self.params, jnp.asarray(blocks)))
         if quantize_latent:
-            q = np.asarray(quantize(jnp.asarray(z), self.bin_size))
-            nbytes = entropy.huffman_compress(q).nbytes()
-            z = np.asarray(dequantize(jnp.asarray(q), self.bin_size))
-        else:
-            nbytes = z.size * 4
+            c = self.codec()
+            enc = c.compress(blocks, self.bin_size)
+            return c.decompress(enc), enc.nbytes
+        z = np.asarray(jax.jit(block_ae_encode)(self.params, jnp.asarray(blocks)))
+        nbytes = z.size * 4
         recon = np.asarray(jax.jit(block_ae_decode)(self.params, jnp.asarray(z)))
         return recon, nbytes
+
+    def codec(self) -> "BlockAECodec":
+        """Unified-protocol view of this fitted baseline (model cost is
+        carried by the codec object, like the main pipeline's weights)."""
+        if self.params is None:
+            raise ValueError("BlockAEBaseline.codec(): call fit() first")
+        return BlockAECodec(baseline=self)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAECodec:
+    """``Codec``-protocol adapter over a fitted :class:`BlockAEBaseline`.
+
+    ``bound`` is the latent quantization bin size; the payload ships the
+    quantized latents (header + Huffman stream) and ``decompress`` runs
+    dequantize + the decoder network — so it only decodes payloads produced
+    with the SAME fitted weights.
+    """
+    baseline: BlockAEBaseline
+    name: str = "block-ae"
+
+    def compress(self, data: np.ndarray, bound: float) -> codec_mod.Encoded:
+        bin_size = float(bound)
+        if not bin_size > 0:
+            raise ValueError(f"block-ae bin size must be > 0, got {bin_size}")
+        z = jax.jit(block_ae_encode)(self.baseline.params, jnp.asarray(data))
+        q = np.asarray(quantize(z, bin_size))
+        from repro.runtime import archive_io
+        stream = entropy.huffman_compress(q.ravel()) if q.size else None
+        head = _MAGIC + struct.pack("<QId", q.shape[0], q.shape[1], bin_size)
+        return codec_mod.Encoded(
+            codec=self.name, payload=head + archive_io._pack_stream(stream))
+
+    def decompress(self, enc: codec_mod.Encoded) -> np.ndarray:
+        from repro.runtime import archive_io
+        r = archive_io._Reader(enc.payload, "block-ae payload")
+        if r.take(4) != _MAGIC:
+            raise MalformedStream("block-ae payload: bad magic")
+        n, latent, bin_size = struct.unpack("<QId", r.take(20))
+        if latent != self.baseline.latent:
+            raise MalformedStream(
+                f"block-ae payload has latent dim {latent}, this codec's "
+                f"model expects {self.baseline.latent}")
+        if not bin_size > 0:
+            raise MalformedStream(
+                f"block-ae payload: bad bin size {bin_size}")
+        stream = archive_io._unpack_stream(r)
+        q = (entropy.huffman_decompress(stream) if stream is not None
+             else np.zeros(0, np.int64))
+        if q.size != n * latent:
+            raise MalformedStream(
+                f"block-ae stream has {q.size} latents, expected "
+                f"{n * latent}")
+        z = dequantize(jnp.asarray(q.reshape(n, latent)), bin_size)
+        return np.asarray(jax.jit(block_ae_decode)(self.baseline.params, z))

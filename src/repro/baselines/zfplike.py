@@ -7,12 +7,25 @@ from the requested tolerance) -> Huffman + DEFLATE.  Embedded bit-plane group
 testing is replaced by entropy coding of quantized coefficients — same
 transform-coding mechanism, simpler bitstream (see DESIGN.md §1);
 EXPERIMENTS.md labels it "zfp-like".
+
+``ZFPLikeCodec`` speaks the unified :mod:`repro.baselines.codec` protocol:
+the payload (header + DEFLATE per-block scale exponents + Huffman coefficient
+stream) is fully self-describing, and ``decompress`` rebuilds ``deq = q *
+(step / scale)`` from shipped integers exactly as the encoder computed it —
+decode is bit-identical to the encoder-side reconstruction.
 """
 from __future__ import annotations
 
+import struct
+
 import numpy as np
 
+from repro.baselines import codec as codec_mod
 from repro.core import entropy
+from repro.core.errors import MalformedStream
+
+_MAGIC = b"ZFL1"
+_MAX_DIMS = 8
 
 # ZFP's forward decorrelating transform (Lindstrom 2014), rows = basis
 _T = np.array([[4, 4, 4, 4],
@@ -55,40 +68,113 @@ def _transform(blocks: np.ndarray, mat: np.ndarray) -> np.ndarray:
     return out
 
 
-def compress(data: np.ndarray, tol: float) -> tuple[np.ndarray, int]:
-    """Tolerance-targeted compression. Returns (decoded, compressed_bytes)."""
-    x = np.asarray(data, np.float32)
-    blocks, padded_shape, grid = _blockify(x)
-    nb = blocks.shape[0]
-    flatb = blocks.reshape(nb, -1)
+def _reconstruct(q: np.ndarray, log2_scale: np.ndarray, tol: float,
+                 shape: tuple) -> np.ndarray:
+    """Shared decoder core: quant integers + scale exponents -> array.
 
-    # block-floating-point: per-block power-of-two scale
-    emax = np.maximum(np.abs(flatb).max(axis=1), 1e-30)
-    scale = np.exp2(np.ceil(np.log2(emax)))[:, None]
-    normed = (flatb / scale).reshape(blocks.shape)
-
-    coeffs = _transform(normed, _T)
-    # uniform quantization of transform coefficients; step tuned so the
-    # per-point reconstruction error lands near `tol` (transform gain ~1)
+    Encoder and decoder both call this, so the encoder's returned ``decoded``
+    IS the decode of the payload, bit for bit.
+    """
+    nd = len(shape)
+    grid = tuple((s + 3) // 4 for s in shape)
+    padded_shape = tuple(g * 4 for g in grid)
+    nb = int(np.prod(grid))
+    block_shape = (nb, *([4] * nd))
+    scale = np.exp2(log2_scale.astype(np.float32))[:, None]
     step = tol * 2.0
-    q = np.round(coeffs.reshape(nb, -1) / (step / scale)).astype(np.int64)
     deq = q.astype(np.float32) * (step / scale)
-
-    rec = _transform(deq.reshape(blocks.shape), _TI)
+    rec = _transform(deq.reshape(block_shape), _TI)
     rec_blocks = rec.reshape(nb, -1) * scale
-    decoded = _unblockify(rec_blocks.reshape(blocks.shape), padded_shape, grid, x.shape)
+    return _unblockify(rec_blocks.reshape(block_shape), padded_shape, grid,
+                       shape).astype(np.float32)
 
-    stream = entropy.huffman_compress(q)
-    scale_bytes = len(entropy.zlib_pack(np.log2(scale[:, 0]).astype(np.int8).tobytes()))
-    total = stream.nbytes() + scale_bytes + 64
-    return decoded.astype(np.float32), total
+
+class ZFPLikeCodec:
+    """Transform-coding codec (unified ``Codec`` protocol)."""
+
+    name = "zfp-like"
+
+    def compress(self, data: np.ndarray, bound: float) -> codec_mod.Encoded:
+        x = np.asarray(data, np.float32)
+        tol = float(bound)
+        blocks, _padded, _grid = _blockify(x)
+        nb = blocks.shape[0]
+        flatb = blocks.reshape(nb, -1)
+
+        # block-floating-point: per-block power-of-two scale
+        emax = np.maximum(np.abs(flatb).max(axis=1), 1e-30)
+        log2_scale = np.ceil(np.log2(emax)).astype(np.int8)
+        scale = np.exp2(log2_scale.astype(np.float32))[:, None]
+        normed = (flatb / scale).reshape(blocks.shape)
+
+        coeffs = _transform(normed, _T)
+        # uniform quantization of transform coefficients; step tuned so the
+        # per-point reconstruction error lands near `tol` (transform gain ~1)
+        step = tol * 2.0
+        q = np.round(coeffs.reshape(nb, -1) / (step / scale)).astype(np.int64)
+        return codec_mod.Encoded(codec=self.name,
+                                 payload=_pack(x.shape, tol, log2_scale, q))
+
+    def decompress(self, enc: codec_mod.Encoded) -> np.ndarray:
+        shape, tol, log2_scale, q = _unpack(enc.payload)
+        return _reconstruct(q, log2_scale, tol, shape)
+
+
+def _pack(shape: tuple, tol: float, log2_scale: np.ndarray,
+          q: np.ndarray) -> bytes:
+    from repro.runtime import archive_io
+    stream = entropy.huffman_compress(q.ravel()) if q.size else None
+    scale_blob = entropy.zlib_pack(log2_scale.tobytes())
+    head = _MAGIC + struct.pack("<B", len(shape))
+    head += struct.pack(f"<{len(shape)}I", *shape)
+    head += struct.pack("<dQ", tol, len(scale_blob))
+    return head + scale_blob + archive_io._pack_stream(stream)
+
+
+def _unpack(payload: bytes) -> tuple[tuple, float, np.ndarray, np.ndarray]:
+    from repro.runtime import archive_io
+    r = archive_io._Reader(payload, "zfp-like payload")
+    if r.take(4) != _MAGIC:
+        raise MalformedStream("zfp-like payload: bad magic")
+    nd = r.u8()
+    if not 1 <= nd <= _MAX_DIMS:
+        raise MalformedStream(f"zfp-like payload: absurd rank {nd}")
+    shape = struct.unpack(f"<{nd}I", r.take(4 * nd))
+    tol, scale_len = struct.unpack("<dQ", r.take(16))
+    if not tol > 0:
+        raise MalformedStream(f"zfp-like payload: bad tolerance {tol}")
+    grid = tuple((s + 3) // 4 for s in shape)
+    nb = int(np.prod(grid))
+    scale_raw = entropy.zlib_unpack(r.take(scale_len))
+    if len(scale_raw) != nb:
+        raise MalformedStream(
+            f"zfp-like scale table holds {len(scale_raw)} exponents, "
+            f"expected {nb}")
+    log2_scale = np.frombuffer(scale_raw, np.int8)
+    stream = archive_io._unpack_stream(r)
+    q = (entropy.huffman_decompress(stream) if stream is not None
+         else np.zeros(0, np.int64))
+    want = nb * 4 ** nd
+    if q.size != want:
+        raise MalformedStream(
+            f"zfp-like stream has {q.size} coefficients, expected {want}")
+    return shape, tol, log2_scale, q.reshape(nb, 4 ** nd)
+
+
+# -- legacy module-level surface --------------------------------------------
+
+def compress(data: np.ndarray, tol: float) -> tuple[np.ndarray, int]:
+    """Tolerance-targeted compression. Returns (decoded, compressed_bytes).
+
+    ``compressed_bytes`` is the length of the REAL decodable payload
+    (``ZFPLikeCodec``), not an estimate.
+    """
+    c = ZFPLikeCodec()
+    enc = c.compress(data, tol)
+    return c.decompress(enc), enc.nbytes
 
 
 def compression_curve(data: np.ndarray, tols: list[float]) -> list[dict]:
-    from repro.data.blocks import nrmse
-    out = []
-    for tol in tols:
-        dec, nbytes = compress(data, tol)
-        out.append({"tol": tol, "cr": data.size * 4 / nbytes,
-                    "nrmse": nrmse(data, dec)})
-    return out
+    """CR / NRMSE points for a sweep of tolerances."""
+    return codec_mod.compression_curve(ZFPLikeCodec(), data, tols,
+                                       bound_key="tol")

@@ -29,6 +29,18 @@ class MalformedStream(ArchiveError):
     out-of-range indices, count mismatches, undecodable prefix, ...)."""
 
 
+class ConfigError(ValueError):
+    """A compression run was configured with values that can never execute
+    (zero-width chunks, an empty device mesh, a mesh without the hyper-block
+    data axis, more shards than devices, ...).
+
+    Raised at ``CompressOptions`` CONSTRUCTION / mesh-resolution time — before
+    any model program is built — so a bad ``--mesh``/``--chunk-hyperblocks``
+    combination surfaces as one typed error instead of a mid-run XLA shape
+    crash deep inside a sharded trace.
+    """
+
+
 class TransientStageError(Exception):
     """A pipeline-stage failure presumed recoverable by retrying the SAME
     item on the SAME stage (worker-pool hiccup, transient ``OSError`` from

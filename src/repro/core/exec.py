@@ -61,12 +61,30 @@ Array = jax.Array
 # persistent jit cache with retrace accounting
 # ---------------------------------------------------------------------------
 
+def _mesh_key(mesh) -> tuple:
+    """Hashable identity of a device mesh for cache keying: axis names, axis
+    sizes, and the flat device ids.  Sharded and single-device programs get
+    DISTINCT cache entries, so running both in one process never retraces
+    either (``mesh=None`` keys exactly like the pre-mesh cache did)."""
+    if mesh is None:
+        return ()
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
 class JitCache:
-    """One persistent ``jax.jit`` wrapper per (name, statics) key.
+    """One persistent ``jax.jit`` wrapper per (name, statics, mesh) key.
 
     The wrapper body increments a per-name retrace counter — the body only
     executes while jax is *tracing*, so the counter counts actual retraces
     (shape/dtype/structure changes), not calls.
+
+    ``mesh`` extends the key for ``shard_map``-wrapped programs: a sharded
+    program is pinned to the mesh it was built over, so the same ``name``
+    may coexist at several mesh shapes (plus the unsharded ``mesh=None``
+    entry) without evicting or retracing one another.  ``fn`` is only
+    consulted on the first call for a given key; callers that rebuild a
+    ``shard_map`` wrapper per call still hit the persistent entry.
     """
 
     def __init__(self):
@@ -76,8 +94,10 @@ class JitCache:
 
     def get(self, name: str, fn: Callable, *,
             static_argnums: Sequence[int] = (),
-            static_argnames: Sequence[str] = ()) -> Callable:
-        key = (name, tuple(static_argnums), tuple(static_argnames))
+            static_argnames: Sequence[str] = (),
+            mesh=None) -> Callable:
+        key = (name, tuple(static_argnums), tuple(static_argnames),
+               _mesh_key(mesh))
         with self._lock:
             cached = self._fns.get(key)
             if cached is None:
@@ -432,3 +452,119 @@ def run_recon_stage(hbae_params: dict, bae_params: list,
     fn = _CACHE.get("recon_frontend", _recon_frontend)
     return np.asarray(jax.device_get(
         fn(hbae_params, bae_params, jnp.asarray(hyperblocks))))
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded stage programs (shard_map over the hyper-block data axis)
+# ---------------------------------------------------------------------------
+# One shard processes EXACTLY one stripe: the caller stacks ``n_shards``
+# equal-width stripes (parallel.mesh_exec.plan_shard_groups), so the
+# per-shard block shapes equal the single-device per-stripe shapes and the
+# per-shard math is bit-identical to the unsharded path — which is what makes
+# sharded archives byte-identical to single-device archives.  Params ride in
+# replicated (in_spec P()); latents stay device-resident and sharded between
+# the encode and decode programs (no gather in the middle).
+
+def _mesh_axis() -> str:
+    from repro.core.options import MESH_AXIS
+    return MESH_AXIS
+
+
+def _sharded_program(name: str, fn: Callable, mesh, in_specs, out_specs
+                     ) -> Callable:
+    """Build-or-fetch one shard_map-wrapped jitted program.  The retrace
+    counter name carries the shard count so sharded and unsharded traces are
+    distinguishable in ``retrace_counts()``."""
+    from jax.experimental.shard_map import shard_map
+    axis = _mesh_axis()
+    counted_name = f"{name}@{axis}{mesh.shape[axis]}"
+    wrapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    return _CACHE.get(counted_name, wrapped, mesh=mesh)
+
+
+def run_compress_stage_sharded_async(hbae_params: dict, bae_params: list,
+                                     stacked: np.ndarray, hb_bin: float,
+                                     bae_bin: float, mesh):
+    """Dispatch the fused compress front-end for ONE shard group: ``stacked``
+    is ``n_shards`` equal-width stripes concatenated on the hyper-block axis
+    (shape ``(n_shards * w, k, d)``).  Each shard runs the same two fused
+    programs the single-device path runs on a ``(w, k, d)`` stripe; the
+    quantized latents stay sharded on device between them.  Returns handles
+    for ``fetch_compress_stage``.
+    """
+    from jax.sharding import PartitionSpec as P
+    axis = _mesh_axis()
+    shard = P(axis)
+    enc = _sharded_program(
+        "encode_frontend", _encode_frontend, mesh,
+        (P(), P(), shard, P(), P()), (shard, shard))
+    dec = _sharded_program(
+        "decode_backend", _decode_backend, mesh,
+        (P(), P(), shard, shard, P(), P()), shard)
+    x = jnp.asarray(stacked)
+    q_lh, q_lbs = enc(hbae_params, bae_params, x, hb_bin, bae_bin)
+    recon = dec(hbae_params, bae_params, q_lh, q_lbs, hb_bin, bae_bin)
+    return q_lh, q_lbs, recon
+
+
+def run_compress_stage_sharded(hbae_params: dict, bae_params: list,
+                               stacked: np.ndarray, hb_bin: float,
+                               bae_bin: float, mesh
+                               ) -> tuple[np.ndarray, list[np.ndarray],
+                                          np.ndarray]:
+    """Blocking sharded compress front-end for one shard group; numpy
+    results cover the whole group (callers slice per stripe).  Stage time is
+    recorded under ``ae_encode_sharded`` with ``calls`` = shard count, so
+    ``stage_stats()`` reports per-shard seconds as ``seconds / calls``."""
+    axis = _mesh_axis()
+    n_shards = int(mesh.shape[axis])
+    t0 = time.perf_counter()
+    out = fetch_compress_stage(run_compress_stage_sharded_async(
+        hbae_params, bae_params, stacked, hb_bin, bae_bin, mesh))
+    record_stage("ae_encode_sharded", time.perf_counter() - t0,
+                 int(np.asarray(stacked).size), calls=n_shards)
+    counter_max("mesh.shards", n_shards)
+    counter_add("mesh.sharded_groups")
+    return out
+
+
+def run_decompress_stage_sharded(hbae_params: dict, bae_params: list,
+                                 q_lh: np.ndarray, q_lbs: list,
+                                 hb_bin: float, bae_bin: float, mesh
+                                 ) -> np.ndarray:
+    """Fused dequantize+decode back-end over the mesh: hyper-block rows are
+    zero-padded to an even shard split (padded rows decode to garbage and
+    are sliced off; real rows decode shard-locally).  ``q_lbs`` rows group
+    ``k`` blocks per hyper-block, so their padded leading axes stay aligned
+    with ``q_lh``'s shard boundaries by construction.
+    """
+    from jax.sharding import PartitionSpec as P
+    axis = _mesh_axis()
+    n_shards = int(mesh.shape[axis])
+    q_lh = _as_q32(q_lh)
+    q_lbs = [_as_q32(q) for q in q_lbs]
+    n = q_lh.shape[0]
+    pad = (-n) % n_shards
+    if pad:
+        q_lh = np.concatenate(
+            [q_lh, np.zeros((pad,) + q_lh.shape[1:], q_lh.dtype)], axis=0)
+        padded_lbs = []
+        for q in q_lbs:
+            k = q.shape[0] // n
+            padded_lbs.append(np.concatenate(
+                [q, np.zeros((pad * k,) + q.shape[1:], q.dtype)], axis=0))
+        q_lbs = padded_lbs
+    shard = P(axis)
+    dec = _sharded_program(
+        "decode_backend", _decode_backend, mesh,
+        (P(), P(), shard, shard, P(), P()), shard)
+    t0 = time.perf_counter()
+    recon = np.asarray(jax.device_get(
+        dec(hbae_params, bae_params, jnp.asarray(q_lh),
+            [jnp.asarray(q) for q in q_lbs], hb_bin, bae_bin)))
+    recon = recon[:n]
+    record_stage("ae_decode_sharded", time.perf_counter() - t0,
+                 int(recon.size), calls=n_shards)
+    counter_max("mesh.shards", n_shards)
+    return recon if recon.flags.writeable else recon.copy()

@@ -30,10 +30,15 @@ from repro.core import exec as exec_mod
 from repro.core import hbae as hbae_mod
 from repro.core import training
 from repro.core.errors import (ArchiveError, ChecksumMismatch, ChunkDamage,
-                               DamageReport, GuaranteeUnsatisfiable,
-                               MalformedStream)
+                               ConfigError, DamageReport,
+                               GuaranteeUnsatisfiable, MalformedStream)
+from repro.core.options import CompressOptions, resolve_options
 
 Array = jax.Array
+
+#: Sentinel distinguishing "kwarg not passed" from an explicit ``None`` on
+#: the deprecated ``compress(tau=..., chunk_hyperblocks=...)`` surface.
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -236,10 +241,23 @@ class HierarchicalCompressor:
                                         hyperblocks)
 
     # -- PCA basis -----------------------------------------------------------
-    def fit_basis(self, hyperblocks: np.ndarray) -> np.ndarray:
-        """PCA basis of AE residuals at GAE block granularity."""
+    def fit_basis(self, hyperblocks: np.ndarray, mesh=None) -> np.ndarray:
+        """PCA basis of AE residuals at GAE block granularity.
+
+        With a ``mesh`` (anything ``parallel.mesh_exec.resolve_mesh``
+        accepts) the D x D residual covariance is computed shard-locally and
+        ``psum``-ed over the hyper-block axis — O(D^2) communication
+        regardless of N — via ``gae.fit_pca_basis(axis_name=...)``.
+        """
         recon = self.reconstruct_ae(hyperblocks)
         resid = self._gae_view(hyperblocks - recon)
+        if mesh is not None:
+            from repro.parallel import mesh_exec
+            resolved = mesh_exec.resolve_mesh(mesh)
+            if resolved is not None:
+                self.basis = np.asarray(
+                    mesh_exec.fit_pca_basis_sharded(resid, resolved))
+                return self.basis
         self.basis = np.asarray(gae.fit_pca_basis(jnp.asarray(resid)))
         return self.basis
 
@@ -256,9 +274,17 @@ class HierarchicalCompressor:
     # -- compress / decompress ----------------------------------------------
     def _chunk_width(self, requested: int, with_gae: bool) -> int:
         """Stripe width in hyper-blocks, aligned so every chunk covers a whole
-        number of GAE blocks (chunks must decode independently)."""
+        number of GAE blocks (chunks must decode independently).
+
+        A non-positive request is a :class:`ConfigError` (it used to be
+        silently clamped to 1, which hid caller bugs and produced archives
+        with a different stripe width than asked for)."""
         cfg = self.cfg
-        width = max(1, int(requested))
+        width = int(requested)
+        if width < 1:
+            raise ConfigError(
+                f"chunk_hyperblocks must be >= 1, got {requested!r} (a "
+                f"zero-width stripe can never tile the hyper-block axis)")
         if with_gae:
             d_gae = cfg.gae_block_elems or cfg.block_elems
             per_hb = cfg.k * cfg.block_elems
@@ -367,41 +393,97 @@ class HierarchicalCompressor:
         return np.frombuffer(raw, "<f4").reshape(
             chunk.n_hyperblocks, cfg.k, cfg.block_elems).copy()
 
-    def prepare_compress(self, hyperblocks: np.ndarray, tau: Optional[float]
-                         ) -> int:
+    def prepare_compress(self, hyperblocks: np.ndarray, tau: Optional[float],
+                         mesh=None) -> int:
         """Shared compress preamble: fit the PCA basis if the caller asked
-        for a guarantee and none exists yet.  Returns ``gae_dim``."""
+        for a guarantee and none exists yet (sharded over ``mesh`` when one
+        is active).  Returns ``gae_dim``."""
         if tau is not None:
             if self.basis is None:
-                self.fit_basis(hyperblocks)
+                self.fit_basis(hyperblocks, mesh=mesh)
             return int(self.basis.shape[0])
         return 0
 
-    def compress(self, hyperblocks: np.ndarray, tau: Optional[float] = None,
-                 chunk_hyperblocks: int = 64) -> Archive:
+    def encode_group_device(self, group, hyperblocks: np.ndarray, mesh
+                            ) -> list[tuple]:
+        """Device half of one shard GROUP's encode: ``len(group)`` equal-width
+        stripes run as ONE ``shard_map`` call, one stripe per shard
+        (``parallel.mesh_exec.plan_shard_groups`` guarantees the alignment).
+        Returns per-stripe ``(q_lh, q_lbs, recon)`` tuples in span order —
+        the same slices ``encode_stripe_device`` would have produced, so the
+        downstream host coders cannot tell the paths apart."""
+        from repro.parallel import mesh_exec
+        start, stop = mesh_exec.group_slice(group)
+        g_lh, g_lbs, g_recon = exec_mod.run_compress_stage_sharded(
+            self.hbae_params, self._stage_params(), hyperblocks[start:stop],
+            self.cfg.hb_bin, self.cfg.bae_bin, mesh)
+        k = self.cfg.k
+        out = []
+        for s, w in group:
+            lo = s - start
+            out.append((g_lh[lo:lo + w],
+                        [q[lo * k:(lo + w) * k] for q in g_lbs],
+                        g_recon[lo:lo + w]))
+        return out
+
+    def compress(self, hyperblocks: np.ndarray, tau=_UNSET,
+                 chunk_hyperblocks=_UNSET,
+                 options: Optional[CompressOptions] = None) -> Archive:
         """Batch-synchronous compress: the device front-end runs stripe by
         stripe to completion, THEN the host GAE/entropy coders fan out over
         the finished stripes.  ``repro.stream.stream_compress`` runs the same
         per-stripe stages pipelined (host coding of stripe *i* overlapped
         with the device stage of stripe *i+1*) and produces byte-identical
-        chunks."""
-        cfg = self.cfg
+        chunks.
+
+        Configuration comes in as ONE ``repro.core.options.CompressOptions``
+        (``options=...``); the old ``tau=``/``chunk_hyperblocks=`` kwargs
+        remain as a deprecated shim.  With ``options.mesh`` set, aligned runs
+        of stripes execute as single ``shard_map`` calls — one stripe per
+        shard — and the archive stays byte-identical to the single-device
+        result (per-shard shapes equal per-stripe shapes, so the floats are
+        bit-equal, and chunk boundaries never move).
+        """
+        legacy = {}
+        if tau is not _UNSET:
+            legacy["tau"] = tau
+        if chunk_hyperblocks is not _UNSET:
+            legacy["chunk_hyperblocks"] = chunk_hyperblocks
+        opts = resolve_options(options, legacy,
+                               caller="HierarchicalCompressor.compress")
+        tau = opts.tau
         n, k, d = hyperblocks.shape
-        gae_dim = self.prepare_compress(hyperblocks, tau)
-        spans = self.stripe_spans(n, chunk_hyperblocks,
+        mesh = None
+        if opts.mesh is not None:
+            from repro.parallel import mesh_exec
+            mesh = mesh_exec.resolve_mesh(opts.mesh)
+        gae_dim = self.prepare_compress(hyperblocks, tau, mesh=mesh)
+        spans = self.stripe_spans(n, opts.chunk_hyperblocks,
                                   with_gae=tau is not None)
 
-        # 1+2. fused device-resident AE front-end, one stripe per program
-        # call (the stripe IS the archive chunk, so batch and streaming run
-        # identical device shapes).
+        # 1+2. fused device-resident AE front-end.  Unsharded: one stripe per
+        # program call (the stripe IS the archive chunk, so batch and
+        # streaming run identical device shapes).  Sharded: aligned groups of
+        # ``n_shards`` stripes run as one shard_map call each; the ragged
+        # tail takes the per-stripe path.
         latents: list[tuple] = []
         with exec_mod.stage("ae_encode", hyperblocks.size):
-            for start, n_hb in spans:
+            tail = spans
+            if mesh is not None:
+                from repro.parallel import mesh_exec
+                groups, tail = mesh_exec.plan_shard_groups(
+                    spans, mesh_exec.mesh_shards(mesh))
+                for group in groups:
+                    latents.extend(self.encode_group_device(
+                        group, hyperblocks, mesh))
+            for start, n_hb in tail:
                 latents.append(self.encode_stripe_device(
                     hyperblocks[start:start + n_hb]))
 
         # 3+4. host-side GAE + entropy coding, chunk-parallel over stripes
-        # (chunks are independently codable by construction).
+        # (chunks are independently codable by construction).  Shard
+        # boundaries coincide with stripe boundaries, so each chunk's
+        # entropy fan-out consumes only rows its own shard produced.
         def encode_chunk(i: int) -> ArchiveChunk:
             start, n_hb = spans[i]
             q_lh, q_lbs, recon = latents[i]
@@ -414,7 +496,7 @@ class HierarchicalCompressor:
 
         return Archive(n_hyperblocks=n, n_values=hyperblocks.size,
                        chunk_hyperblocks=self._chunk_width(
-                           chunk_hyperblocks, with_gae=tau is not None),
+                           opts.chunk_hyperblocks, with_gae=tau is not None),
                        gae_dim=gae_dim, chunks=chunks)
 
     # -- decode helpers ------------------------------------------------------
@@ -488,7 +570,7 @@ class HierarchicalCompressor:
                 pos += idx.size
         return q_lh, q_lbs, codes
 
-    def decompress(self, archive: Archive, strict: bool = True
+    def decompress(self, archive: Archive, strict: bool = True, mesh=None
                    ) -> Union[np.ndarray, tuple[np.ndarray, DamageReport]]:
         """Decode an archive back to hyper-blocks.
 
@@ -497,6 +579,14 @@ class HierarchicalCompressor:
         ``(reconstruction, DamageReport)``: damaged stripes decode from zeroed
         latents with no GAE correction (and no guarantee), every other stripe
         is digest-verified and still satisfies the per-block bound.
+
+        ``mesh`` (anything ``parallel.mesh_exec.resolve_mesh`` accepts) runs
+        the fused dequantize+decode back-end sharded over the hyper-block
+        axis.  The sharded back-end pads the batch to an even shard split, so
+        its floats can differ from the single-device decode in the last ulp —
+        well inside the ``tau * (1 + 1e-5)`` slack every guarantee check in
+        this repo carries.  Entropy decode and GAE correction are unchanged
+        (host-side, chunk-parallel).
         """
         cfg = self.cfg
         n, k, d = archive.n_hyperblocks, cfg.k, cfg.block_elems
@@ -581,11 +671,21 @@ class HierarchicalCompressor:
                 f"chunks cover {covered} hyper-blocks, archive declares {n}")
 
         # fused dequantize+decode back-end — the same cached program that
-        # produced the reconstruction the GAE encoder verified against.
+        # produced the reconstruction the GAE encoder verified against
+        # (shard_map-wrapped over the hyper-block axis when a mesh is active).
+        resolved_mesh = None
+        if mesh is not None:
+            from repro.parallel import mesh_exec
+            resolved_mesh = mesh_exec.resolve_mesh(mesh)
         with exec_mod.stage("ae_decode", archive.n_values):
-            recon = exec_mod.run_decompress_stage(
-                self.hbae_params, self.bae_params, q_lh, q_lbs,
-                cfg.hb_bin, cfg.bae_bin)
+            if resolved_mesh is not None:
+                recon = exec_mod.run_decompress_stage_sharded(
+                    self.hbae_params, self.bae_params, q_lh, q_lbs,
+                    cfg.hb_bin, cfg.bae_bin, resolved_mesh)
+            else:
+                recon = exec_mod.run_decompress_stage(
+                    self.hbae_params, self.bae_params, q_lh, q_lbs,
+                    cfg.hb_bin, cfg.bae_bin)
 
         if archive.gae_dim and gae_codes:
             with exec_mod.stage("gae_decode", archive.n_values):

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.configs import get_compressor_config
 from repro.core import exec as exec_mod
-from repro.core.errors import ArchiveError
+from repro.core.errors import ArchiveError, ConfigError
+from repro.core.options import CompressOptions
 from repro.core.pipeline import HierarchicalCompressor
 from repro.data import synthetic
 from repro.data.blocks import nrmse
@@ -74,12 +75,31 @@ def main(argv=None) -> int:
                     help="--stream chaos drill: inject seeded transient "
                     "faults into the live pipeline (implies fault "
                     "tolerance); the run must still honor tau")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="shard the fused compress/decompress stage "
+                    "programs over an N-device mesh (hyper-block data "
+                    "axis); archives stay byte-identical to single-device "
+                    "runs.  On CPU, force virtual devices with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     args = ap.parse_args(argv)
     if args.verify and not args.out:
         ap.error("--verify requires --out")
     if (args.retries is not None or args.stage_deadline is not None
             or args.chaos is not None) and not args.stream:
         ap.error("--retries/--stage-deadline/--chaos require --stream")
+    try:
+        # the ONE configuration object both compress paths consume; a bad
+        # combination dies here as a typed ConfigError, not mid-run
+        opts = CompressOptions(
+            tau=args.tau, chunk_hyperblocks=args.chunk_hyperblocks,
+            stream=args.stream, queue_depth=args.queue_depth,
+            retries=args.retries, stage_deadline_s=args.stage_deadline,
+            chaos_seed=args.chaos, mesh=args.mesh)
+        if opts.mesh is not None:
+            from repro.parallel.mesh_exec import resolve_mesh
+            resolve_mesh(opts.mesh)     # fail fast on impossible meshes
+    except ConfigError as e:
+        ap.error(str(e))
 
     cfg, hyperblocks = synthetic.make_dataset(args.dataset, quick=args.quick,
                                               seed=args.seed,
@@ -95,44 +115,28 @@ def main(argv=None) -> int:
 
     exec_mod.reset_stage_stats()
     streamed_bytes = 0
-    if args.stream:
-        from repro.stream import FaultTolerance, RetryPolicy, stream_compress
-        ft = None
-        chaos = None
-        if (args.retries is not None or args.stage_deadline is not None
-                or args.chaos is not None):
-            ft = FaultTolerance(
-                retry=RetryPolicy(
-                    max_retries=args.retries if args.retries is not None
-                    else 3,
-                    seed=args.chaos if args.chaos is not None else args.seed),
-                deadline_s=args.stage_deadline, quarantine=True)
-        if args.chaos is not None:
-            from repro.runtime.chaosinject import ChaosInjector, ChaosSpec
-            chaos = ChaosInjector(ChaosSpec(seed=args.chaos,
-                                            transient_rate=0.25,
-                                            permanent_rate=0.05))
+    if opts.stream:
+        from repro.stream import stream_compress
         try:
-            result = stream_compress(
-                comp, hyperblocks, tau=args.tau,
-                chunk_hyperblocks=args.chunk_hyperblocks,
-                out_path=args.out or None, queue_depth=args.queue_depth,
-                fault_tolerance=ft, chaos=chaos)
+            # fault tolerance + chaos arm themselves from opts (retries /
+            # stage_deadline_s / chaos_seed)
+            result = stream_compress(comp, hyperblocks, options=opts,
+                                     out_path=args.out or None)
         except OSError as e:
             print(f"ERROR: streaming write failed: {e}", file=sys.stderr)
             return 3
         archive, streamed_bytes = result.archive, result.bytes_written
         s = result.stats
-        print(f"stream: {s.n_items} chunks in {s.wall_s:.2f}s, "
-              f"device/host overlap {s.overlap_s:.2f}s "
+        print(f"stream: {s.n_items} items -> {len(archive.chunks)} chunks "
+              f"in {s.wall_s:.2f}s, device/host overlap {s.overlap_s:.2f}s "
               f"({s.overlap_efficiency() * 100:.0f}% of wall), "
               f"queue high-water {s.queue_high_water}")
-        if ft is not None:
+        if opts.fault_tolerant():
             print(f"fault tolerance: {s.total_retries()} retries "
                   f"{dict(s.retries)}, deadline hits "
                   f"{dict(s.deadline_hits)}, failovers {dict(s.failovers)}")
-        if chaos is not None:
-            print(f"chaos injected: {chaos.injected}")
+        if opts.chaos_seed is not None:
+            print(f"chaos injected: {result.chaos_injected}")
         if result.quarantined:
             print(f"QUARANTINED {len(result.quarantined)} chunk(s) "
                   f"{result.quarantined}: re-encoded as lossless verbatim "
@@ -140,9 +144,8 @@ def main(argv=None) -> int:
             for ci in result.quarantined:
                 print(f"  chunk {ci}: {result.quarantine_reasons.get(ci, '?')}")
     else:
-        archive = comp.compress(hyperblocks, tau=args.tau,
-                                chunk_hyperblocks=args.chunk_hyperblocks)
-    recon = comp.decompress(archive)
+        archive = comp.compress(hyperblocks, options=opts)
+    recon = comp.decompress(archive, mesh=opts.mesh)
     print("-- hot-path stage throughput --")
     print(exec_mod.stats_summary())
 
@@ -184,7 +187,8 @@ def main(argv=None) -> int:
         from repro.runtime import archive_io
         try:
             archive2 = archive_io.read_archive(args.out)
-            recon2 = comp.decompress(archive2)
+            # same mesh as the first decode: bit-exact comparability
+            recon2 = comp.decompress(archive2, mesh=opts.mesh)
         except ArchiveError as e:
             print(f"ERROR: verification re-read failed: {e}", file=sys.stderr)
             return 3

@@ -172,14 +172,17 @@ def run_chaos_check(comp, hyperblocks, tau: float, spec: ChaosSpec,
     invariant is a ``violations`` entry (empty == pass)."""
     import os
 
+    from repro.core.options import CompressOptions
     from repro.runtime import archive_io
     from repro.stream import FaultTolerance, RetryPolicy, stream_compress
 
     report = ChaosReport(scenario=scenario, violations=[])
-    batch = comp.compress(hyperblocks, tau=tau,
-                          chunk_hyperblocks=chunk_hyperblocks)
+    opts = CompressOptions(tau=tau, chunk_hyperblocks=chunk_hyperblocks)
+    batch = comp.compress(hyperblocks, options=opts)
     batch_sections = [archive_io.pack_chunk_section(c) for c in batch.chunks]
 
+    # explicit FaultTolerance/ChaosInjector objects (custom backoff + spec
+    # rates) override the CompressOptions-derived defaults
     ft = FaultTolerance(
         retry=RetryPolicy(max_retries=3, base_backoff_s=0.005,
                           max_backoff_s=0.05, seed=spec.seed),
@@ -192,8 +195,7 @@ def run_chaos_check(comp, hyperblocks, tau: float, spec: ChaosSpec,
         chaos = ChaosInjector(spec)
         finished, result = _run_with_watchdog(
             lambda: stream_compress(
-                comp, hyperblocks, tau=tau,
-                chunk_hyperblocks=chunk_hyperblocks, out_path=path,
+                comp, hyperblocks, options=opts, out_path=path,
                 fault_tolerance=ft, chaos=chaos),
             budget_s)
         if not finished:

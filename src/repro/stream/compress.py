@@ -45,10 +45,15 @@ import numpy as np
 
 from repro.core import exec as exec_mod
 from repro.core.errors import TransientStageError
+from repro.core.options import CompressOptions, resolve_options
 from repro.core.pipeline import Archive, ArchiveChunk, HierarchicalCompressor
 from repro.runtime.stream_writer import StreamingArchiveWriter
 from repro.stream.scheduler import RetryPolicy, StageGraph, StageSpec, \
     StreamScheduler, StreamStats
+
+#: Sentinel distinguishing "kwarg not passed" from an explicit ``None`` on
+#: the deprecated ``stream_compress(tau=..., ...)`` kwarg surface.
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -84,17 +89,27 @@ class StreamResult:
     bytes_written: int = 0        # 0 when no out_path was given
     quarantined: list = dataclasses.field(default_factory=list)
     quarantine_reasons: dict = dataclasses.field(default_factory=dict)
+    chaos_injected: dict = dataclasses.field(default_factory=dict)
+    # ^ faults the injector actually fired, by kind (empty when no chaos)
 
 
 def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
-                    tau: Optional[float] = None, chunk_hyperblocks: int = 64,
-                    out_path: Optional[str] = None, *, queue_depth: int = 2,
+                    tau=_UNSET, chunk_hyperblocks=_UNSET,
+                    out_path: Optional[str] = None, *,
+                    options: Optional[CompressOptions] = None,
+                    queue_depth=_UNSET,
                     host_workers: Optional[int] = None,
                     fsync_every: bool = False,
                     fault_tolerance: Optional[FaultTolerance] = None,
                     chaos=None) -> StreamResult:
     """Pipelined compress of ``hyperblocks``; byte-identical chunks to
-    ``comp.compress(hyperblocks, tau, chunk_hyperblocks)``.
+    ``comp.compress(hyperblocks, options=options)``.
+
+    Configuration comes in as ONE ``repro.core.options.CompressOptions``
+    (``options=...``); the old ``tau=``/``chunk_hyperblocks=``/
+    ``queue_depth=`` kwargs remain as a deprecated shim.  ``out_path``,
+    ``host_workers`` and ``fsync_every`` are IO concerns of THIS entry point,
+    not compression semantics, so they stay plain kwargs.
 
     When ``out_path`` is given, finished chunk sections stream into
     ``<out_path>.partial`` as they complete and the container is atomically
@@ -102,21 +117,78 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
     tolerant salvage.  Without ``out_path`` only the in-memory ``Archive`` is
     produced.
 
-    ``fault_tolerance=None`` keeps the historical fail-fast semantics (any
-    stage error aborts the run).  With a ``FaultTolerance``, transient
-    failures retry, hung attempts hit the stage deadline, and permanently
-    failing stripes are quarantined as lossless verbatim chunks (when
-    ``quarantine`` is enabled) so the run still finalizes with every
-    hyper-block within tau.  ``chaos`` is a fault injector forwarded to the
-    scheduler (``repro.runtime.chaosinject``).
+    Fault tolerance arms itself from the options (``retries`` /
+    ``stage_deadline_s`` / ``chaos_seed`` — any one of them set enables the
+    retry → deadline → quarantine ladder).  An explicit ``fault_tolerance=``
+    / ``chaos=`` object overrides the options-derived default for callers
+    that need a custom ``RetryPolicy`` or ``ChaosSpec``; permanently failing
+    stripes are quarantined as lossless verbatim chunks so the run still
+    finalizes with every hyper-block within tau.
+
+    With ``options.mesh`` set, aligned runs of ``n_shards`` stripes ride the
+    scheduler as ONE item each (= one ``shard_map`` call, one stripe per
+    shard); the ragged tail stays per-stripe.  Chunk boundaries, chunk bytes
+    and the on-disk container are identical to the single-device stream —
+    per-shard block shapes equal per-stripe shapes, and the host entropy
+    fan-out still consumes exactly one stripe per chunk (all shard-local).
     """
+    legacy = {}
+    if tau is not _UNSET:
+        legacy["tau"] = tau
+    if chunk_hyperblocks is not _UNSET:
+        legacy["chunk_hyperblocks"] = chunk_hyperblocks
+    if queue_depth is not _UNSET:
+        legacy["queue_depth"] = queue_depth
+    opts = resolve_options(options, legacy, caller="stream_compress")
+    tau = opts.tau
+    queue_depth = opts.queue_depth
+
+    mesh = None
+    if opts.mesh is not None:
+        from repro.parallel import mesh_exec
+        mesh = mesh_exec.resolve_mesh(opts.mesh)
+
+    ft = fault_tolerance
+    if ft is None and opts.fault_tolerant():
+        ft = FaultTolerance(
+            retry=RetryPolicy(
+                max_retries=opts.retries if opts.retries is not None else 3,
+                seed=opts.chaos_seed if opts.chaos_seed is not None else 0),
+            deadline_s=opts.stage_deadline_s, quarantine=True)
+    if chaos is None and opts.chaos_seed is not None:
+        from repro.runtime.chaosinject import ChaosInjector, ChaosSpec
+        chaos = ChaosInjector(ChaosSpec(seed=opts.chaos_seed,
+                                        transient_rate=0.25,
+                                        permanent_rate=0.05))
+
     cfg = comp.cfg
     n = hyperblocks.shape[0]
-    gae_dim = comp.prepare_compress(hyperblocks, tau)
-    spans = comp.stripe_spans(n, chunk_hyperblocks, with_gae=tau is not None)
-    width = comp._chunk_width(chunk_hyperblocks, with_gae=tau is not None)
+    gae_dim = comp.prepare_compress(hyperblocks, tau, mesh=mesh)
+    spans = comp.stripe_spans(n, opts.chunk_hyperblocks,
+                              with_gae=tau is not None)
+    width = comp._chunk_width(opts.chunk_hyperblocks,
+                              with_gae=tau is not None)
     chunks: list[Optional[ArchiveChunk]] = [None] * len(spans)
     quarantine_reasons: dict[int, str] = {}
+
+    # Scheduler items: one entry per DEVICE DISPATCH, each a list of
+    # (chunk_idx, span).  Unsharded: one stripe per item.  Sharded: aligned
+    # groups of n_shards stripes collapse into one item (one shard_map call);
+    # the ragged tail stays per-stripe.
+    if mesh is not None:
+        from repro.parallel import mesh_exec
+        groups, tail_spans = mesh_exec.plan_shard_groups(
+            spans, mesh_exec.mesh_shards(mesh))
+        items: list[list] = []
+        ci = 0
+        for group in groups:
+            items.append([(ci + j, span) for j, span in enumerate(group)])
+            ci += len(group)
+        for span in tail_spans:
+            items.append([(ci, span)])
+            ci += 1
+    else:
+        items = [[(ci, span)] for ci, span in enumerate(spans)]
 
     writer: Optional[StreamingArchiveWriter] = None
     if out_path is not None:
@@ -125,48 +197,72 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
             chunk_hyperblocks=width, gae_dim=gae_dim, spans=spans,
             fsync_every=fsync_every)
 
-    def dispatch(i: int, span: tuple) -> tuple:
-        start, n_hb = span
-        handles = exec_mod.run_compress_stage_async(
-            comp.hbae_params, comp._stage_params(),
-            hyperblocks[start:start + n_hb], cfg.hb_bin, cfg.bae_bin)
-        return span, handles
+    def dispatch(i: int, item: list) -> tuple:
+        if len(item) == 1:
+            _, (start, n_hb) = item[0]
+            handles = exec_mod.run_compress_stage_async(
+                comp.hbae_params, comp._stage_params(),
+                hyperblocks[start:start + n_hb], cfg.hb_bin, cfg.bae_bin)
+        else:
+            start = item[0][1][0]
+            stop = item[-1][1][0] + item[-1][1][1]
+            handles = exec_mod.run_compress_stage_sharded_async(
+                comp.hbae_params, comp._stage_params(),
+                hyperblocks[start:stop], cfg.hb_bin, cfg.bae_bin, mesh)
+            exec_mod.counter_max("mesh.shards", len(item))
+            exec_mod.counter_add("mesh.sharded_groups")
+        return item, handles
 
-    def transfer(i: int, payload) -> tuple:
+    def transfer(i: int, payload) -> list:
         if isinstance(payload, _Quarantined):
             return payload                     # ride through to host_encode
-        span, handles = payload
-        return span, exec_mod.fetch_compress_stage(handles)
+        item, handles = payload
+        q_lh, q_lbs, recon = exec_mod.fetch_compress_stage(handles)
+        base = item[0][1][0]
+        k = cfg.k
+        parts = []
+        for ci, (start, n_hb) in item:
+            lo = start - base
+            parts.append((ci, (start, n_hb),
+                          (q_lh[lo:lo + n_hb],
+                           [q[lo * k:(lo + n_hb) * k] for q in q_lbs],
+                           recon[lo:lo + n_hb])))
+        return parts
 
-    def quarantine_encode(i: int, exc: BaseException) -> ArchiveChunk:
-        start, n_hb = spans[i]
-        quarantine_reasons[i] = repr(exc)
-        return comp.encode_stripe_verbatim(
-            start, hyperblocks[start:start + n_hb])
+    def quarantine_encode(i: int, exc: BaseException) -> list:
+        out = []
+        for ci, (start, n_hb) in items[i]:
+            quarantine_reasons[ci] = repr(exc)
+            out.append((ci, comp.encode_stripe_verbatim(
+                start, hyperblocks[start:start + n_hb])))
+        return out
 
-    def host_encode(i: int, payload) -> ArchiveChunk:
+    def host_encode(i: int, payload) -> list:
         if isinstance(payload, _Quarantined):
             return quarantine_encode(i, payload.exc)
-        (start, n_hb), (q_lh, q_lbs, recon) = payload
-        # ride the shared codec pool — same workers as batch map_parallel
-        return exec_mod.pool_submit(
+        # ride the shared codec pool — same workers as batch map_parallel;
+        # a sharded item fans its stripes out across the pool concurrently
+        futures = [(ci, exec_mod.pool_submit(
             comp.encode_stripe_host, start,
             hyperblocks[start:start + n_hb], q_lh, q_lbs, recon,
-            tau, gae_dim).result()
+            tau, gae_dim))
+            for ci, (start, n_hb), (q_lh, q_lbs, recon) in payload]
+        return [(ci, f.result()) for ci, f in futures]
 
-    def sink(i: int, chunk: ArchiveChunk) -> int:
-        chunks[i] = chunk
-        if writer is not None:
-            try:
-                writer.append(i, chunk)
-            except OSError as e:
-                # transient disk errors ride the retry ladder; append is
-                # idempotent under retry (byte-identical re-append)
-                raise TransientStageError(
-                    f"sink append of chunk {i} failed: {e}") from e
+    def sink(i: int, encoded: list) -> int:
+        for ci, chunk in encoded:
+            chunks[ci] = chunk
+            if writer is not None:
+                try:
+                    writer.append(ci, chunk)
+                except OSError as e:
+                    # transient disk errors ride the retry ladder; append is
+                    # idempotent under retry (byte-identical re-append), so a
+                    # multi-chunk item replays already-durable chunks safely
+                    raise TransientStageError(
+                        f"sink append of chunk {ci} failed: {e}") from e
         return i
 
-    ft = fault_tolerance
     retry = ft.retry if ft is not None else None
     deadline = ft.deadline_s if ft is not None else None
     fallback = (lambda i, payload, exc: _Quarantined(exc)) \
@@ -189,7 +285,7 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
 
     bytes_written = 0
     try:
-        _, stats = StreamScheduler(graph, chaos=chaos).run(spans)
+        _, stats = StreamScheduler(graph, chaos=chaos).run(items)
     except BaseException:      # retry-boundary: abort the writer, re-raise
         if writer is not None:
             writer.abort()     # keep <out_path>.partial for tolerant salvage
@@ -206,4 +302,6 @@ def stream_compress(comp: HierarchicalCompressor, hyperblocks: np.ndarray,
     return StreamResult(archive=archive, stats=stats,
                         bytes_written=bytes_written,
                         quarantined=quarantined,
-                        quarantine_reasons=dict(quarantine_reasons))
+                        quarantine_reasons=dict(quarantine_reasons),
+                        chaos_injected=(dict(chaos.injected)
+                                        if chaos is not None else {}))

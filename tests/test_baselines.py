@@ -3,6 +3,8 @@ import numpy as np
 import pytest
 
 from repro.baselines import block_ae, szlike, zfplike
+from repro.baselines.codec import Codec, Encoded, roundtrip
+from repro.core.errors import ArchiveError
 from repro.data import synthetic
 from repro.data.blocks import Normalizer, block_nd, nrmse
 
@@ -53,3 +55,63 @@ def test_block_ae_baseline_trains_and_compresses(field):
     assert recon.shape == blocks.shape
     assert nbytes < blocks.size * 4
     assert nrmse(blocks, recon) < nrmse(blocks, np.zeros_like(blocks))
+
+
+# -- unified Codec protocol ---------------------------------------------------
+
+def test_codec_protocol_conformance():
+    assert isinstance(szlike.SZLikeCodec(), Codec)
+    assert isinstance(zfplike.ZFPLikeCodec(), Codec)
+
+
+def test_szlike_payload_roundtrip(field):
+    """The payload alone decodes, bit-identically to the encoder-side view."""
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    c = szlike.SZLikeCodec()
+    for eb in (0.1, 0.01):
+        dec, enc = roundtrip(c, norm, eb)
+        legacy_dec, legacy_nbytes = szlike.compress(norm, eb)
+        assert np.array_equal(dec, legacy_dec)
+        assert enc.nbytes == legacy_nbytes
+        assert np.abs(dec - norm).max() <= eb + 1e-5
+
+
+def test_zfplike_payload_roundtrip(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    c = zfplike.ZFPLikeCodec()
+    dec, enc = roundtrip(c, norm, 0.01)
+    legacy_dec, legacy_nbytes = zfplike.compress(norm, 0.01)
+    assert np.array_equal(dec, legacy_dec)
+    assert enc.nbytes == legacy_nbytes
+    assert nrmse(norm, dec) < 0.05
+
+
+def test_block_ae_codec_roundtrip(field):
+    norm = Normalizer.fit(field, "zscore").forward(field)
+    blocks, _ = block_nd(norm, (6, 16, 16))
+    base = block_ae.BlockAEBaseline(in_dim=blocks.shape[1], hidden=32,
+                                    latent=8, epochs=2, bin_size=0.02)
+    base.fit(blocks, seed=0)
+    c = base.codec()
+    assert isinstance(c, Codec)
+    dec, enc = roundtrip(c, blocks, base.bin_size)
+    legacy_dec, legacy_nbytes = base.compress(blocks)
+    assert np.array_equal(dec, legacy_dec)
+    assert enc.nbytes == legacy_nbytes
+
+
+def test_block_ae_codec_requires_fit():
+    base = block_ae.BlockAEBaseline(in_dim=8)
+    with pytest.raises(ValueError, match="fit"):
+        base.codec()
+
+
+@pytest.mark.parametrize("make", [szlike.SZLikeCodec, zfplike.ZFPLikeCodec])
+def test_codec_rejects_malformed_payloads(make):
+    c = make()
+    enc = c.compress(np.zeros((16, 16), np.float32), 0.1)
+    for bad in (enc.payload[:10],          # truncated header
+                b"XXXX" + enc.payload[4:],  # wrong magic
+                enc.payload[:-5]):          # truncated stream
+        with pytest.raises(ArchiveError):
+            c.decompress(Encoded(codec=c.name, payload=bad))
